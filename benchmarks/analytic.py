@@ -1,0 +1,111 @@
+"""Analytic MODEL_FLOPS per (arch x shape) — the 'useful work' yardstick.
+
+MODEL_FLOPS = the FLOPs an ideal implementation must execute:
+  * train:   6 * N_active * tokens  (fwd 2x + bwd 4x matmul passes)
+             + 3 * ideal causal attention (fwd 1x + bwd 2x, half the square)
+  * prefill: 2 * N_active * tokens + ideal causal attention
+  * decode:  2 * N_active * batch   + attention against the full context
+N_active counts matmul parameters touched per token: dense weights + lm_head
+(+ top-k/E of expert weights + shared experts for MoE); the embedding gather
+is excluded (it is a memory op).  SSM/RWKV state recurrences add their
+per-token state math.
+
+The ratio MODEL_FLOPS / executed_HLO_FLOPs exposes remat recompute and
+masked-attention waste (see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.models.model import ModelConfig, iter_schema
+from repro.launch.shapes import ShapeSpec
+
+
+def matmul_params_per_token(cfg: ModelConfig) -> float:
+    """Active matmul parameters per token."""
+    total = 0.0
+    moe_scale = 1.0
+    if cfg.moe is not None:
+        moe_scale = cfg.moe.top_k / cfg.moe.n_experts
+    for path, spec in iter_schema(cfg):
+        if len(spec.shape) < 2:
+            continue
+        n = float(np.prod(spec.shape))
+        leaf = path.split(".")[-1]
+        if path == "embed":
+            continue                       # gather, not matmul
+        if leaf in ("tm_mu", "tm_lora_b"):  # elementwise-ish mixes
+            continue
+        if path.startswith("blocks.") and spec.logical_axes[0] == "layers":
+            pass                           # already includes the L factor
+        if leaf in ("e_gate", "e_up", "e_down"):
+            n *= moe_scale
+        total += n
+    return total
+
+
+def attention_flops(cfg: ModelConfig, seq: int, batch: int, kind: str,
+                    causal_ideal: bool = True) -> float:
+    """Ideal attention/state-mixing FLOPs.  ``seq`` is the context length;
+    decode processes ONE new token against it (state families update their
+    O(1) state once; attention families read the whole KV)."""
+    d_attn = cfg.n_heads * cfg.head_dim
+    new_tokens = 1 if kind == "decode" else seq
+    if cfg.family == "rwkv6":
+        # state recurrence: per new token per layer ~6 * D * head_size
+        return 6.0 * cfg.d_model * 64 * cfg.n_layers * new_tokens * batch
+    if cfg.family == "zamba2":
+        ssm = 6.0 * cfg.d_inner * cfg.ssm_state * cfg.n_layers \
+            * new_tokens * batch
+        n_attn = cfg.n_shared_attn
+        eff = min(seq, cfg.window) if cfg.window else seq
+        attn = 4.0 * batch * new_tokens * eff * d_attn * n_attn
+        if causal_ideal and kind != "decode" and not cfg.window:
+            attn *= 0.5
+        return ssm + attn
+    eff = min(seq, cfg.window) if cfg.window else seq
+    a = 4.0 * batch * new_tokens * eff * d_attn * cfg.n_layers
+    if causal_ideal and kind != "decode" and not cfg.window:
+        a *= 0.5
+    return a
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Global ideal FLOPs for one step of the cell."""
+    n_act = matmul_params_per_token(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens + 3.0 * attention_flops(
+            cfg, shape.seq_len, shape.global_batch, "train")
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens + attention_flops(
+            cfg, shape.seq_len, shape.global_batch, "prefill")
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch + attention_flops(
+        cfg, shape.seq_len, shape.global_batch, "decode")
+
+
+def model_bytes_floor(cfg: ModelConfig, shape: ShapeSpec, n_devices: int,
+                      param_bytes: int = 2) -> float:
+    """Per-device HBM-traffic floor: every resident parameter byte read once
+    per step (weights are the irreducible stream for batch>=1); decode adds
+    the KV/state cache read."""
+    n_params = cfg.param_count()
+    per_dev = n_params * param_bytes / n_devices
+    if shape.kind == "decode":
+        if cfg.family in ("attn", "moe"):
+            kv = (cfg.n_layers * 2 * cfg.n_kv_heads * cfg.head_dim
+                  * min(shape.seq_len, cfg.window or shape.seq_len)
+                  * shape.global_batch * 2)
+        elif cfg.family == "rwkv6":
+            kv = cfg.n_layers * (cfg.d_model // 64) * 64 * 64 * 4 \
+                * shape.global_batch
+        else:
+            kv = (cfg.n_shared_attn * 2 * cfg.n_kv_heads * cfg.head_dim
+                  * shape.seq_len * shape.global_batch * 2
+                  + cfg.n_layers * cfg.mamba_heads
+                  * (cfg.d_inner // cfg.mamba_heads) * cfg.ssm_state * 4
+                  * shape.global_batch)
+        per_dev += kv / n_devices
+    return per_dev

@@ -1,0 +1,30 @@
+"""Re-run hloanalysis over saved .hlo.gz artifacts and refresh the
+'executed' block of each dry-run JSON (used after analyzer improvements —
+no recompilation needed)."""
+import glob
+import gzip
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+from repro.launch import hloanalysis  # noqa: E402
+
+
+def main(dirname="results/dryrun"):
+    n = 0
+    for hf in glob.glob(f"{dirname}/*.hlo.gz"):
+        jf = hf[: -len(".hlo.gz")] + ".json"
+        if not Path(jf).exists():
+            continue
+        with gzip.open(hf, "rt") as f:
+            txt = f.read()
+        rec = json.loads(Path(jf).read_text())
+        rec["executed"] = hloanalysis.analyze(txt)
+        Path(jf).write_text(json.dumps(rec, indent=1))
+        n += 1
+    print(f"rescored {n} cells in {dirname}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

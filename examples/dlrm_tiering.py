@@ -1,0 +1,88 @@
+"""DLRM embedding-bag inference with a tiered table — the paper's §III.B
+evaluation as a *running JAX model* (scaled down from 20.48 GB to ~64 MB so
+it executes on CPU; the full-scale trace-driven numbers are in
+``python -m benchmarks.run --only table1_dlrm``).
+
+Flow (paper Fig. 2): allocate table in the slow tier -> profile batches with
+the HMU-instrumented embedding-bag -> promote top-K blocks -> measure the
+per-tier access mix and model the speedup.
+
+    PYTHONPATH=src python examples/dlrm_tiering.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import TieredStore, CXL_SYSTEM
+from repro.core import policy as policy_lib
+from repro.dlrm.datagen import DLRMTraceSpec, ZipfPageSampler
+from repro.kernels.embedding_bag import embedding_bag
+
+# ---- scaled table: 256k rows x 64 dims (fp32) = 64 MB, block = 16 rows
+N_ROWS, DIM, BLOCK_ROWS = 262_144, 64, 16
+N_BLOCKS = N_ROWS // BLOCK_ROWS
+FAST_FRACTION = 0.09                       # the paper's 9% top-tier footprint
+BATCH, BAG = 256, 16
+
+rng = np.random.default_rng(0)
+table = jnp.asarray(rng.normal(size=(N_ROWS, DIM)) * 0.05, jnp.float32)
+store = TieredStore.create(table, block_rows=BLOCK_ROWS,
+                           n_slots=int(N_BLOCKS * FAST_FRACTION))
+
+spec = DLRMTraceSpec(n_params=N_ROWS * DIM, emb_dim=DIM, alpha=1.31,
+                     lookups_per_batch=BATCH * BAG, page_bytes=BLOCK_ROWS * DIM * 4)
+sampler = ZipfPageSampler(spec, seed=1)
+
+
+def batch_indices():
+    pages = sampler.sample(BATCH * BAG)
+    rows = pages * BLOCK_ROWS + rng.integers(0, BLOCK_ROWS, BATCH * BAG)
+    return jnp.asarray(rows.reshape(BATCH, BAG), jnp.int32)
+
+
+# ---- profiling phase: HMU counters ride along the embedding-bag kernel
+counts = jnp.zeros((N_BLOCKS,), jnp.int32)
+bag = jax.jit(lambda st, idx, c: embedding_bag(st, idx, c,
+                                               block_rows=BLOCK_ROWS))
+t0 = time.time()
+for _ in range(20):
+    idx = batch_indices()
+    pooled, counts = bag(store.storage[store.fast_rows:], idx, counts)
+print(f"profiled 20 batches in {time.time()-t0:.1f}s; "
+      f"HMU saw {int(np.asarray(counts).sum())} accesses "
+      f"across {int((np.asarray(counts) > 0).sum())} blocks")
+
+# ---- promote the top-K hot blocks (oracle methodology)
+plan = policy_lib.oracle_top_k(counts, k=store.n_slots)
+store = store.promote(plan.promote)
+print(f"promoted {int(store.fast_occupancy())} blocks "
+      f"({FAST_FRACTION:.0%} of table) to the fast tier")
+
+# ---- measurement: tier-aware gather + modeled time per batch
+eval_counts = np.zeros(N_BLOCKS, np.int64)
+for _ in range(5):
+    idx = batch_indices()
+    rows_flat = idx.reshape(-1)
+    pooled = store.gather(rows_flat)             # tier-transparent data plane
+    np.testing.assert_allclose(np.asarray(pooled),
+                               np.asarray(table)[np.asarray(rows_flat)])
+    np.add.at(eval_counts, np.asarray(rows_flat) // BLOCK_ROWS, 1)
+
+fast_mask = np.asarray(store.block_to_slot) >= 0
+n_fast = float(eval_counts[fast_mask].sum())
+n_slow = float(eval_counts.sum() - n_fast)
+bpa = DIM * 4
+t_tier = CXL_SYSTEM.access_time_s(n_fast, n_slow, bpa)
+t_fast = CXL_SYSTEM.access_time_s(n_fast + n_slow, 0, bpa)
+t_slow = CXL_SYSTEM.access_time_s(0, n_fast + n_slow, bpa)
+print(f"\nfast-tier hit rate: {n_fast/(n_fast+n_slow):.1%}")
+print(f"modeled lookup time/eval: tiered={t_tier*1e6:.0f}us "
+      f"dram-only={t_fast*1e6:.0f}us cxl-only={t_slow*1e6:.0f}us")
+print(f"=> tiered within {t_tier/t_fast:.2f}x of DRAM-only at "
+      f"{FAST_FRACTION:.0%} footprint (paper: 1.03x at 9%)")

@@ -1,0 +1,60 @@
+"""Expert tiering for MoE — the paper's DLRM sparsity argument applied to
+expert weights (DESIGN.md §2): with 384 experts top-8, ~2% of expert bytes
+are live per token; the router's expert counters ARE memory-side telemetry
+(full coverage, zero extra cost), so hot experts can live in HBM and cold
+ones in the capacity tier.
+
+Runs the reduced Kimi-style MoE, collects per-layer expert counts from the
+forward pass, plans placement per telemetry source, and models decode-time
+expert-weight fetch cost.
+
+    PYTHONPATH=src python examples/expert_tiering_moe.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import TPU_V5E_SYSTEM
+from repro.core.metrics import accuracy, true_top_k
+from repro.models.model import forward, init_params
+
+cfg = get_smoke_config("kimi-k2-1t-a32b")
+params = init_params(cfg, jax.random.key(0))
+rng = np.random.default_rng(0)
+
+# skewed token stream (popular tokens route to the same experts)
+fwd = jax.jit(lambda p, t: forward(p, cfg, tokens=t)[1]["expert_counts"])
+counts = np.zeros((cfg.n_layers, cfg.moe.n_experts), np.int64)
+for _ in range(16):
+    zipf = np.minimum(rng.zipf(1.3, size=(4, 64)) - 1, cfg.vocab_size - 1)
+    counts += np.asarray(fwd(params, jnp.asarray(zipf, jnp.int32)))
+
+per_expert = counts.sum(0)
+e = cfg.moe.n_experts
+k_fast = max(e // 4, 1)                      # HBM capacity: 25% of experts
+print(f"experts={e} top_k={cfg.moe.top_k}; counts over 16 batches:")
+print("  per-expert activation counts:", per_expert.tolist())
+
+hot = true_top_k(per_expert, k_fast)
+print(f"\nHMU (router) telemetry -> promote {k_fast} experts: {sorted(hot.tolist())}")
+
+# placement quality & modeled expert-weight fetch time at decode
+bytes_per_expert = 3 * cfg.d_model * cfg.moe.d_expert * 2   # gate/up/down bf16
+total = per_expert.sum()
+fast_traffic = per_expert[hot].sum()
+sysm = TPU_V5E_SYSTEM
+t_tier = sysm.access_time_s(fast_traffic, total - fast_traffic, bytes_per_expert)
+t_hbm = sysm.access_time_s(total, 0, bytes_per_expert)
+t_host = sysm.access_time_s(0, total, bytes_per_expert)
+print(f"hot-expert traffic share: {fast_traffic/total:.1%} at "
+      f"{k_fast/e:.0%} of expert bytes resident in HBM")
+print(f"modeled expert-weight fetch: tiered={t_tier*1e6:.0f}us "
+      f"all-HBM={t_hbm*1e6:.0f}us all-host={t_host*1e6:.0f}us")
+print(f"=> {t_host/t_tier:.1f}x faster than full offload, "
+      f"{bytes_per_expert*(e-k_fast)/1e6:.0f} MB of HBM freed per layer")

@@ -1,0 +1,46 @@
+"""Quickstart: memory-side tiering telemetry in 60 lines.
+
+Builds a two-tier store, runs a skewed workload through the three telemetry
+emulators (HMU / PEBS / NUMA-balancing), promotes with each one's hot list,
+and prints the resulting accuracy / coverage / modeled speed — the paper's
+core experiment at toy scale.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import TieredStore, TieringManager, CXL_SYSTEM
+
+# ---- a table with a hot head: 4096 blocks, the first 400 are 90% of traffic
+N_BLOCKS, K_HOT = 4096, 400
+rng = np.random.default_rng(0)
+
+mgr = TieringManager(n_blocks=N_BLOCKS, k_hot=K_HOT,
+                     pebs_period=997, nb_scan_rate=N_BLOCKS // 4)
+for _ in range(32):
+    hot = rng.integers(0, K_HOT, 18_000)          # 90% of accesses
+    cold = rng.integers(K_HOT, N_BLOCKS, 2_000)   # 10%
+    mgr.observe(np.concatenate([hot, cold]))
+
+results = mgr.evaluate(CXL_SYSTEM, bytes_per_access=256.0)
+print(f"{'strategy':<10s}{'accuracy':>9s}{'coverage':>9s}"
+      f"{'host ev.':>10s}{'time':>10s}")
+for name in ("hmu", "pebs", "nb", "dram-only", "cxl-only"):
+    r = results[name.replace("cxl-only", "slow-only")]
+    print(f"{name:<10s}{r.accuracy:>9.2f}{r.coverage:>9.2f}"
+          f"{r.host_events:>10d}{r.time_s*1e6:>9.0f}us")
+
+# ---- and the actual data plane: a TieredStore gather is tier-transparent
+data = jnp.arange(N_BLOCKS * 4 * 8, dtype=jnp.float32).reshape(N_BLOCKS * 4, 8)
+store = TieredStore.create(data, block_rows=4, n_slots=K_HOT)
+store = store.promote(jnp.asarray(results["hmu"].promoted[:K_HOT]))
+rows = jnp.asarray(rng.integers(0, N_BLOCKS * 4, 64))
+assert bool(jnp.all(store.gather(rows) == data[rows]))
+print(f"\nTieredStore: {int(store.fast_occupancy())}/{K_HOT} fast slots "
+      "filled; reads identical before/after promotion ✓")

@@ -1,0 +1,6 @@
+"""repro — memory-side tiering telemetry (HMU) for JAX training/serving.
+
+Reproduction + extension of "A Limits Study of Memory-side Tiering Telemetry"
+(Petrucci, Zacarias, Roberts — Micron, 2025).
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,20 @@
+"""Memory-side tiering telemetry — the paper's contribution as a JAX library.
+
+Public surface:
+  TieredStore           two-tier block store + indirection (blockstore.py)
+  HMU / PEBS / NB       telemetry emulators over one access stream (telemetry.py)
+  policies              oracle top-k, NB two-touch, reactive, proactive, hinted
+  MemSystem             two-tier analytic cost model (costmodel.py)
+  TieringManager        Fig.2 "Tiering Agent" glue (manager.py)
+  metrics               accuracy / coverage / overlap / hotness CDF
+"""
+from .blockstore import TieredStore
+from .costmodel import CXL_SYSTEM, TPU_V5E_SYSTEM, MemSystem, TierSpec
+from .manager import StrategyResult, TieringManager
+from . import metrics, policy, telemetry
+
+__all__ = [
+    "TieredStore", "TieringManager", "StrategyResult",
+    "MemSystem", "TierSpec", "CXL_SYSTEM", "TPU_V5E_SYSTEM",
+    "metrics", "policy", "telemetry",
+]

@@ -1,0 +1,211 @@
+"""Two-tier block store with an indirection map — the memory system under study.
+
+The paper's platform is Host-DRAM (fast tier) + CXL expander (slow tier) with
+4 KiB pages migrated by the OS.  The TPU-native equivalent implemented here is a
+single *tiered address space*:
+
+  ``storage[0 : fast_rows)``                  -- fast tier (HBM-resident region)
+  ``storage[fast_rows : fast_rows + n_rows)`` -- slow tier (capacity region; on a
+                                                 real system: host memory / CXL)
+
+Data is organised in fixed-size **blocks** (``block_rows`` rows each — the 4 KiB
+page analogue).  The slow region permanently backs every block; a block may
+additionally be *promoted* into a fast-region slot, after which the indirection
+map resolves its rows to the fast copy.  Promotion/demotion are block copies
+plus an indirection update — exactly ``migrate_pages()`` semantics.
+
+Everything is a pytree of jnp arrays and functional, so the store can live
+inside jit/pjit programs and be sharded like any other model state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TieredStore:
+    """Two-tier row store with block-granular promotion."""
+
+    # (fast_rows + n_rows, dim): fast region followed by the slow backing region.
+    storage: jax.Array
+    # (n_blocks,) int32: fast-slot id for each block, -1 if resident slow-only.
+    block_to_slot: jax.Array
+    # (n_slots,) int32: block id occupying each fast slot, -1 if free.
+    slot_to_block: jax.Array
+    # static metadata
+    block_rows: int = dataclasses.field(metadata=dict(static=True))
+    n_rows: int = dataclasses.field(metadata=dict(static=True))
+
+    # ------------------------------------------------------------------ sizes
+    @property
+    def n_blocks(self) -> int:
+        return self.block_to_slot.shape[0]
+
+    @property
+    def n_slots(self) -> int:
+        return self.slot_to_block.shape[0]
+
+    @property
+    def fast_rows(self) -> int:
+        return self.n_slots * self.block_rows
+
+    @property
+    def dim(self) -> int:
+        return self.storage.shape[-1]
+
+    # ------------------------------------------------------------ construction
+    @staticmethod
+    def create(data: jax.Array, block_rows: int, n_slots: int) -> "TieredStore":
+        """All blocks start in the slow tier (the paper's profiling phase:
+        'memory allocation operations are directed to CXL memory')."""
+        n_rows, dim = data.shape
+        if n_rows % block_rows:
+            raise ValueError(f"n_rows {n_rows} not a multiple of block_rows {block_rows}")
+        n_blocks = n_rows // block_rows
+        if n_slots > n_blocks:
+            raise ValueError("fast tier larger than dataset; nothing to tier")
+        fast = jnp.zeros((n_slots * block_rows, dim), data.dtype)
+        return TieredStore(
+            storage=jnp.concatenate([fast, data], axis=0),
+            block_to_slot=jnp.full((n_blocks,), -1, jnp.int32),
+            slot_to_block=jnp.full((n_slots,), -1, jnp.int32),
+            block_rows=block_rows,
+            n_rows=n_rows,
+        )
+
+    # ------------------------------------------------------------- resolution
+    def resolve(self, rows: jax.Array) -> jax.Array:
+        """Logical row ids -> physical addresses in the tiered address space."""
+        block = rows // self.block_rows
+        offset = rows % self.block_rows
+        slot = self.block_to_slot[block]
+        fast_addr = slot * self.block_rows + offset
+        slow_addr = self.fast_rows + rows
+        return jnp.where(slot >= 0, fast_addr, slow_addr)
+
+    def is_fast(self, rows: jax.Array) -> jax.Array:
+        return self.block_to_slot[rows // self.block_rows] >= 0
+
+    def gather(self, rows: jax.Array) -> jax.Array:
+        """Tier-aware gather (the pure-jnp reference; the Pallas gather_count
+        kernel fuses this with HMU counter updates)."""
+        return jnp.take(self.storage, self.resolve(rows), axis=0)
+
+    # ------------------------------------------------------------- migration
+    def promote(self, block_ids: jax.Array) -> "TieredStore":
+        """Promote ``block_ids`` (padded with -1) into fast slots.
+
+        Eviction is demote-on-overwrite: we fill free slots first, then evict
+        the current occupants of the lowest-index used slots (the policy layer
+        orders candidates so victims are its coldest choices — see
+        ``policy.plan_migration`` which emits explicit (victim, winner) pairs).
+        Blocks already fast are skipped.  Fully functional / jit-safe.
+        """
+        return _promote(self, block_ids)
+
+    def demote(self, block_ids: jax.Array) -> "TieredStore":
+        """Write fast copies back to the slow region and free the slots."""
+        return _demote(self, block_ids)
+
+    # ---------------------------------------------------------------- updates
+    def scatter_update(self, rows: jax.Array, values: jax.Array) -> "TieredStore":
+        """Write-through update at whatever tier each row resides in."""
+        addr = self.resolve(rows)
+        return dataclasses.replace(
+            self, storage=self.storage.at[addr].set(values.astype(self.storage.dtype))
+        )
+
+    def fast_occupancy(self) -> jax.Array:
+        return jnp.sum(self.slot_to_block >= 0)
+
+
+@partial(jax.jit, donate_argnums=0)
+def _promote(store: TieredStore, block_ids: jax.Array) -> TieredStore:
+    block_ids = block_ids.astype(jnp.int32)
+    n_slots = store.n_slots
+    br = store.block_rows
+
+    valid = block_ids >= 0
+    already_fast = jnp.where(valid, store.block_to_slot[block_ids] >= 0, True)
+    need = valid & ~already_fast
+
+    # Assign the i-th needed block to the i-th target slot: free slots first,
+    # then occupied slots in ascending order (their occupants get evicted).
+    free = store.slot_to_block < 0
+    slot_order = jnp.argsort(~free, stable=True)  # free slots first
+    rank = jnp.cumsum(need) - 1  # dense rank among needed blocks
+    slot_for = jnp.where(need & (rank < n_slots), slot_order[jnp.clip(rank, 0, n_slots - 1)], -1)
+
+    # Evict current occupants of targeted slots (write fast copy back to slow).
+    victim = jnp.where(slot_for >= 0, store.slot_to_block[jnp.clip(slot_for, 0, n_slots - 1)], -1)
+
+    storage = store.storage
+    b2s = store.block_to_slot
+    s2b = store.slot_to_block
+
+    def body(i, carry):
+        storage, b2s, s2b = carry
+        blk, slot, vic = block_ids[i], slot_for[i], victim[i]
+
+        def do(args):
+            storage, b2s, s2b = args
+            safe_slot = jnp.maximum(slot, 0)
+            fast_base = safe_slot * br
+            # 1. write back the victim's fast copy
+            def writeback(st):
+                vic_rows = jax.lax.dynamic_slice_in_dim(st, fast_base, br, axis=0)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    st, vic_rows, store.fast_rows + jnp.maximum(vic, 0) * br, axis=0
+                )
+            storage2 = jax.lax.cond(vic >= 0, writeback, lambda st: st, storage)
+            # 2. copy the new block from slow into the slot
+            src = jax.lax.dynamic_slice_in_dim(storage2, store.fast_rows + blk * br, br, axis=0)
+            storage2 = jax.lax.dynamic_update_slice_in_dim(storage2, src, fast_base, axis=0)
+            # 3. indirection updates
+            b2s2 = b2s.at[jnp.maximum(vic, 0)].set(
+                jnp.where(vic >= 0, -1, b2s[jnp.maximum(vic, 0)])
+            )
+            b2s2 = b2s2.at[blk].set(slot)
+            s2b2 = s2b.at[safe_slot].set(blk)
+            return storage2, b2s2, s2b2
+
+        # re-check residency against the *current* map so duplicate ids within
+        # one call are promoted only once
+        fresh = jnp.where(blk >= 0, b2s[jnp.maximum(blk, 0)] < 0, False)
+        return jax.lax.cond((slot >= 0) & fresh, do, lambda a: a, (storage, b2s, s2b))
+
+    storage, b2s, s2b = jax.lax.fori_loop(0, block_ids.shape[0], body, (storage, b2s, s2b))
+    return dataclasses.replace(store, storage=storage, block_to_slot=b2s, slot_to_block=s2b)
+
+
+@partial(jax.jit, donate_argnums=0)
+def _demote(store: TieredStore, block_ids: jax.Array) -> TieredStore:
+    block_ids = block_ids.astype(jnp.int32)
+    br = store.block_rows
+
+    def body(i, carry):
+        storage, b2s, s2b = carry
+        blk = block_ids[i]
+        slot = jnp.where(blk >= 0, b2s[jnp.maximum(blk, 0)], -1)
+
+        def do(args):
+            storage, b2s, s2b = args
+            safe_slot = jnp.maximum(slot, 0)
+            rows = jax.lax.dynamic_slice_in_dim(storage, safe_slot * br, br, axis=0)
+            storage2 = jax.lax.dynamic_update_slice_in_dim(
+                storage, rows, store.fast_rows + blk * br, axis=0
+            )
+            return storage2, b2s.at[blk].set(-1), s2b.at[safe_slot].set(-1)
+
+        return jax.lax.cond(slot >= 0, do, lambda a: a, (storage, b2s, s2b))
+
+    storage, b2s, s2b = jax.lax.fori_loop(
+        0, block_ids.shape[0], body, (store.storage, store.block_to_slot, store.slot_to_block)
+    )
+    return dataclasses.replace(store, storage=storage, block_to_slot=b2s, slot_to_block=s2b)

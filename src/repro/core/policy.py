@@ -1,0 +1,92 @@
+"""Promotion policies: estimated hotness -> migration plan.
+
+The paper's methodology ("Oracle" Hotness-based Tiering, §III) promotes the
+top-K blocks by profiled access count, K sized to the fast tier / hot region.
+We implement that plus the reactive / proactive / hinted variants the paper
+proposes for programmable memory-side telemetry (§VI).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPlan:
+    """Block ids to promote (padded with -1), in priority order."""
+    promote: jax.Array
+    demote: Optional[jax.Array] = None
+
+
+def oracle_top_k(est_counts: jax.Array, k: int, min_count: int = 1) -> MigrationPlan:
+    """Promote the top-k blocks by estimated count ('Oracle Hotness-based
+    Tiering').  Blocks with count < min_count are never promoted — this is
+    what limits PEBS: unsampled hot blocks have count 0 and stay cold, so its
+    *coverage* of K is low even when its *accuracy* is high."""
+    k = min(k, est_counts.shape[0])
+    counts, ids = jax.lax.top_k(est_counts, k)
+    return MigrationPlan(promote=jnp.where(counts >= min_count, ids, -1))
+
+
+def nb_two_touch(faults: jax.Array, k: int, rate_limit: Optional[int] = None) -> MigrationPlan:
+    """Linux NB promotion: candidates need >= 2 hint faults; ranked by fault
+    count (a recency proxy, NOT true frequency).  ``rate_limit`` models the
+    kernel's promotion rate limiting (pages per epoch)."""
+    k = min(k, faults.shape[0])
+    if rate_limit is not None:
+        k = min(k, rate_limit)
+    counts, ids = jax.lax.top_k(faults, k)
+    return MigrationPlan(promote=jnp.where(counts >= 2, ids, -1))
+
+
+def reactive_watermark(
+    est_counts: jax.Array,
+    hot_threshold: int,
+    free_slots: jax.Array,
+    max_moves: int,
+) -> MigrationPlan:
+    """Reactive placement: promote any block whose counter crosses the hot
+    threshold, bounded by free fast-tier capacity this epoch."""
+    k = int(max_moves)
+    counts, ids = jax.lax.top_k(est_counts, min(k, est_counts.shape[0]))
+    rank = jnp.arange(counts.shape[0])
+    ok = (counts >= hot_threshold) & (rank < free_slots)
+    return MigrationPlan(promote=jnp.where(ok, ids, -1))
+
+
+def proactive_ewma(
+    prev_pred: jax.Array, est_counts: jax.Array, k: int, alpha: float = 0.5
+) -> tuple[jax.Array, MigrationPlan]:
+    """Proactive data movement (paper §VI): EWMA trend prediction per block;
+    promote blocks *predicted* hot next epoch, before they are re-touched."""
+    pred = alpha * est_counts.astype(jnp.float32) + (1.0 - alpha) * prev_pred
+    k = min(k, pred.shape[0])
+    vals, ids = jax.lax.top_k(pred, k)
+    return pred, MigrationPlan(promote=jnp.where(vals > 0, ids, -1))
+
+
+def hinted(
+    est_counts: jax.Array, hint_rank: jax.Array, k: int, hint_weight: float = 0.25
+) -> MigrationPlan:
+    """Programmer/compiler hints (paper §VI): blend telemetry rank with a
+    static priority.  ``hint_rank`` in [0,1], larger = more important."""
+    n = est_counts.shape[0]
+    # rank-space blend so magnitudes are comparable
+    t_rank = jnp.argsort(jnp.argsort(est_counts)) / max(n - 1, 1)
+    score = (1.0 - hint_weight) * t_rank + hint_weight * hint_rank
+    k = min(k, n)
+    vals, ids = jax.lax.top_k(score, k)
+    return MigrationPlan(promote=ids)
+
+
+def coldest_victims(est_counts: jax.Array, slot_to_block: jax.Array, n: int) -> jax.Array:
+    """Pick the n coldest currently-fast blocks as demotion victims."""
+    occ = slot_to_block >= 0
+    blk = jnp.maximum(slot_to_block, 0)
+    heat = jnp.where(occ, est_counts[blk], jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(heat)
+    sel = order[: min(n, order.shape[0])]
+    return jnp.where(occ[sel], slot_to_block[sel], -1)

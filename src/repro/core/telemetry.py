@@ -1,0 +1,202 @@
+"""Telemetry collectors: three observers of one ground-truth access stream.
+
+The paper's central experiment is to feed the *same* workload to three hotness
+trackers and compare what each believes the hot set is:
+
+* ``HMU``  — memory-side Hotness Monitoring Unit: sees **every** request the
+  memory device services (the CXL Data Logger snoops all CXL.mem packets).
+  Exact per-block counters, zero host cost for collection; host cost only to
+  drain/process the log.
+* ``PEBS`` — CPU-assisted sampling: sees every ``period``-th memory access
+  (Intel PEBS semantics).  Full-address precision on sampled events but
+  **coverage** is bounded by the sampling period; each sample costs host work.
+* ``NB``   — OS-level NUMA-balancing hints: the kernel *unmaps* pages in a
+  cyclic scan; the next touch of an unmapped page raises a hint fault.  The OS
+  therefore observes **recency, not frequency**: one touch after a scan looks
+  identical to ten thousand touches.  Each fault costs host work.
+
+All collectors are functional pytrees; ``observe`` is jit-able and is driven
+with batches of row/page indices (the "physical addresses" in the log).  The
+access stream itself is produced by the workloads (mmap-bench, DLRM, the LM
+embedding / expert / KV layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "HMUState", "PEBSState", "NBState",
+    "hmu_init", "hmu_observe", "hmu_estimate", "hmu_drain_cost",
+    "pebs_init", "pebs_observe", "pebs_estimate",
+    "nb_init", "nb_observe", "nb_estimate",
+]
+
+
+# =====================================================================  HMU
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HMUState:
+    """Memory-side exact counters + bounded request-log emulation.
+
+    ``counts`` is what a counter-mode HMU exposes.  ``log_used``/``log_dropped``
+    model the paper's log-DRAM capacity (256 GB on the FPGA card): in log mode
+    every request consumes one record until the log fills; software must drain
+    it (``hmu_drain``) or subsequent records are dropped.  Drops only affect
+    log mode — counter mode never loses events.
+    """
+    counts: jax.Array          # (n_blocks,) int64-ish exact access counts
+    log_used: jax.Array        # scalar: records currently in the log
+    log_dropped: jax.Array     # scalar: records lost to log overflow
+    log_capacity: int = dataclasses.field(metadata=dict(static=True))
+    host_events: jax.Array     # scalar: host work units spent (drain only)
+
+
+def hmu_init(n_blocks: int, log_capacity: int = 1 << 33) -> HMUState:
+    # Scalar accounting uses float32 (x64 is disabled; these model counters can
+    # exceed int32 range for a 256 GB log -> billions of records).  Distinct
+    # arrays (not one shared buffer) so donation works.
+    return HMUState(
+        counts=jnp.zeros((n_blocks,), jnp.int32),
+        log_used=jnp.zeros((), jnp.float32),
+        log_dropped=jnp.zeros((), jnp.float32),
+        log_capacity=int(log_capacity),
+        host_events=jnp.zeros((), jnp.float32),
+    )
+
+
+@partial(jax.jit, donate_argnums=0, static_argnums=2)
+def hmu_observe(state: HMUState, block_ids: jax.Array, weight: int = 1) -> HMUState:
+    """Device-side: every access counted. No host involvement."""
+    flat = block_ids.reshape(-1)
+    counts = state.counts.at[flat].add(weight, mode="drop")
+    n = jnp.asarray(flat.shape[0] * weight, jnp.float32)
+    free = jnp.maximum(jnp.float32(state.log_capacity) - state.log_used, 0.0)
+    appended = jnp.minimum(n, free)
+    return dataclasses.replace(
+        state,
+        counts=counts,
+        log_used=state.log_used + appended,
+        log_dropped=state.log_dropped + (n - appended),
+    )
+
+
+def hmu_estimate(state: HMUState) -> jax.Array:
+    return state.counts
+
+
+def hmu_drain_cost(state: HMUState, per_record_cost: float = 1.0) -> HMUState:
+    """Host drains/processes the log (paper: 'process the trace immediately').
+    This is the only host cost HMU incurs; NMC (paper §VI) would shrink it."""
+    return dataclasses.replace(
+        state,
+        host_events=state.host_events + state.log_used * per_record_cost,
+        log_used=jnp.zeros((), jnp.float32),
+    )
+
+
+# =====================================================================  PEBS
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PEBSState:
+    sampled: jax.Array        # (n_blocks,) number of *sampled* hits per block
+    cursor: jax.Array         # scalar: global access index mod period
+    period: int = dataclasses.field(metadata=dict(static=True))
+    host_events: jax.Array    # scalar: one per PEBS record (interrupt+parse)
+
+
+def pebs_init(n_blocks: int, period: int = 10007) -> PEBSState:
+    return PEBSState(
+        sampled=jnp.zeros((n_blocks,), jnp.int32),
+        cursor=jnp.zeros((), jnp.float32),
+        period=int(period),
+        host_events=jnp.zeros((), jnp.float32),
+    )
+
+
+@partial(jax.jit, donate_argnums=0)
+def pebs_observe(state: PEBSState, block_ids: jax.Array) -> PEBSState:
+    """CPU-assisted: only every ``period``-th access in program order is seen.
+
+    The access stream order is the order of ``block_ids`` — identical to what
+    the HMU sees, so coverage differences are purely due to sampling.
+    """
+    flat = block_ids.reshape(-1)
+    n = flat.shape[0]
+    # cursor is float32 for range; exact for streams < 2^24 per phase window.
+    start = state.cursor.astype(jnp.int32) % state.period
+    idx = start + jnp.arange(n, dtype=jnp.int32)
+    hit = (idx % state.period) == 0
+    # scatter-add only sampled positions (weight 0/1)
+    sampled = state.sampled.at[flat].add(hit.astype(jnp.int32), mode="drop")
+    return dataclasses.replace(
+        state,
+        sampled=sampled,
+        cursor=state.cursor + n,
+        host_events=state.host_events + jnp.sum(hit).astype(jnp.float32),
+    )
+
+
+def pebs_estimate(state: PEBSState) -> jax.Array:
+    """Scaled estimate: each sample represents ``period`` accesses."""
+    return state.sampled * state.period
+
+
+# =====================================================================  NB
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NBState:
+    """Linux NUMA-balancing emulation (task_numa_work-style cyclic scanner).
+
+    The scanner unmaps ``scan_rate`` blocks per observe call starting at
+    ``scan_ptr``; a *first* touch of an unmapped block raises a hint fault
+    (host_events += 1), re-maps the block and bumps its fault count.  Blocks
+    are promotion candidates after >= 2 faults (two-touch rule).  Frequency
+    beyond the first touch per scan pass is invisible — that is the accuracy
+    limitation the paper measures.
+    """
+    mapped: jax.Array        # (n_blocks,) bool: PTE present (access invisible)
+    faults: jax.Array        # (n_blocks,) hint-fault counts
+    scan_ptr: jax.Array      # scalar cyclic scan position
+    scan_rate: int = dataclasses.field(metadata=dict(static=True))
+    host_events: jax.Array   # scalar: hint faults serviced
+
+
+def nb_init(n_blocks: int, scan_rate: int) -> NBState:
+    return NBState(
+        mapped=jnp.ones((n_blocks,), jnp.bool_),
+        faults=jnp.zeros((n_blocks,), jnp.int32),
+        scan_ptr=jnp.zeros((), jnp.int32),
+        scan_rate=int(scan_rate),
+        host_events=jnp.zeros((), jnp.float32),
+    )
+
+
+@partial(jax.jit, donate_argnums=0)
+def nb_observe(state: NBState, block_ids: jax.Array) -> NBState:
+    n_blocks = state.mapped.shape[0]
+    # 1. scanner tick: unmap the next scan_rate blocks (cyclic)
+    scan_idx = (state.scan_ptr + jnp.arange(state.scan_rate, dtype=jnp.int32)) % n_blocks
+    mapped = state.mapped.at[scan_idx].set(False)
+    # 2. workload touches: first touch of an unmapped block faults
+    flat = block_ids.reshape(-1)
+    touched = jnp.zeros((n_blocks,), jnp.bool_).at[flat].set(True, mode="drop")
+    faulted = touched & ~mapped
+    faults = state.faults + faulted.astype(jnp.int32)
+    mapped = mapped | touched
+    return dataclasses.replace(
+        state,
+        mapped=mapped,
+        faults=faults,
+        scan_ptr=(state.scan_ptr + state.scan_rate) % n_blocks,
+        host_events=state.host_events + jnp.sum(faulted).astype(jnp.float32),
+    )
+
+
+def nb_estimate(state: NBState) -> jax.Array:
+    """NB's 'hotness' signal: hint-fault counts (recency proxy).
+    Two-touch gating is applied by the policy layer (candidates = faults >= 2)."""
+    return state.faults

@@ -1,0 +1,87 @@
+"""TieredEmbedding — the paper's technique wired into the LM stack.
+
+The vocab embedding table is a TieredStore (hot rows fast-tier / cold rows
+capacity-tier) managed by HMU-style telemetry:
+
+  * **telemetry**: the training/serving step already touches every token id;
+    exact per-block access counts are a segment-sum of the token stream —
+    the jit-side analogue of the gather_count Pallas kernel's fused counters
+    (which is what runs on real TPU hardware).
+  * **policy**: oracle top-K / reactive / proactive from core.policy.
+  * **placement**: block promotions between steps (host-side control plane,
+    like the paper's Tiering Agent); the data plane (gather) is tier-oblivious
+    because the TieredStore address space makes promoted rows transparent.
+  * **accounting**: the cost model (TPU profile: HBM vs host-over-PCIe)
+    converts the per-tier access mix into modeled embed-lookup time, so runs
+    report the tiering benefit the way Table 1 does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .blockstore import TieredStore
+from . import policy as policy_lib
+from .costmodel import MemSystem, TPU_V5E_SYSTEM
+
+
+@dataclasses.dataclass
+class TieredEmbedding:
+    store: TieredStore
+    counts: np.ndarray                   # exact per-block access counts (HMU)
+    system: MemSystem = TPU_V5E_SYSTEM
+    policy: str = "oracle"               # oracle | proactive
+    _pred: Optional[np.ndarray] = None   # EWMA state for proactive
+
+    @staticmethod
+    def create(table: jax.Array, block_rows: int = 8,
+               fast_fraction: float = 0.1, **kw) -> "TieredEmbedding":
+        n_rows = table.shape[0]
+        n_blocks = n_rows // block_rows
+        n_slots = max(int(n_blocks * fast_fraction), 1)
+        store = TieredStore.create(table, block_rows=block_rows, n_slots=n_slots)
+        return TieredEmbedding(store=store,
+                               counts=np.zeros(n_blocks, np.int64), **kw)
+
+    # ------------------------------------------------------------- telemetry
+    def observe_tokens(self, tokens) -> None:
+        """Feed the step's token ids (any shape) — memory-side counting."""
+        blocks = np.asarray(tokens).reshape(-1) // self.store.block_rows
+        np.add.at(self.counts, blocks, 1)
+
+    # --------------------------------------------------------------- control
+    def rebalance(self) -> int:
+        """Run the promotion policy; returns #blocks promoted this epoch."""
+        k = self.store.n_slots
+        if self.policy == "proactive":
+            pred = self.counts.astype(np.float32) if self._pred is None \
+                else 0.5 * self.counts + 0.5 * self._pred
+            self._pred = pred
+            plan = policy_lib.oracle_top_k(jnp.asarray(pred.astype(np.int32)), k)
+        else:
+            plan = policy_lib.oracle_top_k(jnp.asarray(
+                self.counts.astype(np.int32)), k)
+        before = int(self.store.fast_occupancy())
+        self.store = self.store.promote(plan.promote)
+        return int(self.store.fast_occupancy()) - before
+
+    # ------------------------------------------------------------ accounting
+    def modeled_lookup_time_s(self, n_lookups_by_block: Optional[np.ndarray]
+                              = None) -> dict:
+        counts = (n_lookups_by_block if n_lookups_by_block is not None
+                  else self.counts)
+        fast_mask = np.asarray(self.store.block_to_slot) >= 0
+        n_fast = float(counts[fast_mask].sum())
+        n_slow = float(counts.sum() - n_fast)
+        bpa = self.store.dim * self.store.storage.dtype.itemsize
+        return {
+            "tiered_s": self.system.access_time_s(n_fast, n_slow, bpa),
+            "all_fast_s": self.system.access_time_s(n_fast + n_slow, 0, bpa),
+            "all_slow_s": self.system.access_time_s(0, n_fast + n_slow, bpa),
+            "fast_hit_rate": n_fast / max(n_fast + n_slow, 1.0),
+            "fast_bytes": int(fast_mask.sum()) * self.store.block_rows * bpa,
+        }

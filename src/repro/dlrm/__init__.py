@@ -1,0 +1,1 @@
+"""DLRM embedding-table tiering — the paper's §III.B evaluation workload."""

@@ -1,0 +1,35 @@
+"""jit'd public wrapper for embedding_bag (TPU kernel / jnp fallback)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import embedding_bag_pallas
+from .ref import embedding_bag_ref
+
+
+@partial(jax.jit, static_argnames=("block_rows", "use_pallas", "interpret"))
+def embedding_bag(
+    storage: jax.Array,
+    indices: jax.Array,
+    counts: jax.Array,
+    weights: jax.Array | None = None,
+    *,
+    block_rows: int,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """Batched (weighted) embedding-bag with fused HMU counters.
+
+    Returns (pooled (B, D), new_counts)."""
+    if weights is None:
+        weights = jnp.ones(indices.shape, jnp.float32)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return embedding_bag_ref(storage, indices, weights, counts, block_rows=block_rows)
+    return embedding_bag_pallas(
+        storage, indices, weights, counts, block_rows=block_rows, interpret=interpret
+    )

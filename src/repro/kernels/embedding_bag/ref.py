@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for embedding_bag."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    storage: jax.Array,   # (N, D)
+    indices: jax.Array,   # (B, L)
+    weights: jax.Array,   # (B, L)
+    counts: jax.Array,    # (n_blocks,)
+    *,
+    block_rows: int,
+):
+    rows = jnp.take(storage, indices, axis=0).astype(jnp.float32)     # (B, L, D)
+    out = jnp.einsum("bl,bld->bd", weights.astype(jnp.float32), rows)
+    blk = indices.astype(jnp.int32) // block_rows
+    new_counts = counts.at[blk.reshape(-1)].add(1)
+    return out.astype(storage.dtype), new_counts

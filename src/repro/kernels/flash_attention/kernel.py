@@ -1,0 +1,141 @@
+"""Blocked causal (optionally sliding-window) attention for TPU.
+
+Standard flash-attention online-softmax, restructured for the TPU memory
+hierarchy: Q/K/V tiles staged by BlockSpec into VMEM, the two matmuls sized
+for the MXU (block dims multiples of 128), running (max, sum, acc) carried in
+VMEM scratch across the KV-block grid dimension.  GQA is handled in the
+BlockSpec index maps (a KV head serves q_per_kv query heads) so KV tiles are
+fetched once per group, not per query head.
+
+Causal + window skipping happens at grid level: out-of-range KV blocks are
+masked fully and their matmuls skipped with ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,      # (1, bq, d)
+    k_ref,      # (1, bk, d)
+    v_ref,      # (1, bk, d)
+    o_ref,      # (1, bq, d)
+    m_ref,      # (bq, 128) f32 scratch: running max
+    l_ref,      # (bq, 128) f32 scratch: running sum
+    acc_ref,    # (bq, d) f32 scratch
+    *,
+    block_q: int,
+    block_k: int,
+    sm_scale: float,
+    causal: bool,
+    window: int | None,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # A KV block participates unless fully masked out.
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        needed = needed & (k_start + block_k - 1 >= q_start - window)
+
+    @pl.when(needed)
+    def compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                           # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos >= qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                                  # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                                 # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                        # (bq, 1)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == nk - 1)
+    def publish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,   # (BH, Sq, D)  BH = batch * q_heads
+    k: jax.Array,   # (BKH, Sk, D) BKH = batch * kv_heads
+    v: jax.Array,
+    *,
+    q_per_kv: int,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"seq lens {(sq, sk)} must tile by {(block_q, block_k)}")
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+
+    grid = (bh, sq // block_q, sk // block_k)
+
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k,
+        sm_scale=sm_scale, causal=causal, window=window,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, qi, ki: (h // q_per_kv, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, qi, ki: (h // q_per_kv, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

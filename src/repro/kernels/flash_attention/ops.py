@@ -1,0 +1,32 @@
+"""jit'd public wrapper for flash attention (TPU kernel / jnp fallback)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=(
+    "q_per_kv", "causal", "window", "block_q", "block_k", "use_pallas", "interpret"))
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    q_per_kv: int = 1,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return attention_ref(q, k, v, q_per_kv=q_per_kv, causal=causal, window=window)
+    return flash_attention_pallas(
+        q, k, v, q_per_kv=q_per_kv, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: exact causal/windowed GQA attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,   # (BH, Sq, D)
+    k: jax.Array,   # (BKH, Sk, D)
+    v: jax.Array,
+    *,
+    q_per_kv: int,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+):
+    bh, sq, d = q.shape
+    bkh, sk, _ = k.shape
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    kk = jnp.repeat(k, q_per_kv, axis=0)
+    vv = jnp.repeat(v, q_per_kv, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s *= sm_scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos >= qpos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key (can happen with windows) -> zeros
+    p = jnp.where(mask[None].any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("hqk,hkd->hqd", p, vv.astype(jnp.float32)).astype(q.dtype)

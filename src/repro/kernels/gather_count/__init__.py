@@ -1,0 +1,4 @@
+from .ops import gather_count
+from .ref import gather_count_ref
+
+__all__ = ["gather_count", "gather_count_ref"]

@@ -1,0 +1,54 @@
+"""jit'd public wrapper for gather_count.
+
+Dispatches to the Pallas TPU kernel on TPU backends and to the pure-jnp
+reference elsewhere (CPU dry-runs / tests run the kernel in interpret mode
+explicitly).  The wrapper pads the index vector to the tile size so callers
+can pass arbitrary M.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_TILE_M, gather_count_pallas
+from .ref import gather_count_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_rows", "tile_m", "use_pallas", "interpret"))
+def gather_count(
+    storage: jax.Array,
+    indices: jax.Array,
+    counts: jax.Array,
+    *,
+    block_rows: int,
+    tile_m: int = DEFAULT_TILE_M,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """Tier-aware gather + HMU counter update.  Returns (rows, new_counts)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return gather_count_ref(storage, indices, counts, block_rows=block_rows)
+
+    m = indices.shape[0]
+    pad = (-m) % tile_m
+    if pad:
+        # pad with row 0 and subtract the phantom counts afterwards
+        indices_p = jnp.concatenate([indices, jnp.zeros((pad,), indices.dtype)])
+    else:
+        indices_p = indices
+    out, new_counts = gather_count_pallas(
+        storage, indices_p, counts,
+        block_rows=block_rows, tile_m=tile_m, interpret=interpret,
+    )
+    if pad:
+        new_counts = new_counts.at[0].add(-pad)
+        out = out[:m]
+    return out, new_counts

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for gather_count."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_count_ref(
+    storage: jax.Array,   # (N, D)
+    indices: jax.Array,   # (M,)
+    counts: jax.Array,    # (n_blocks,) int32
+    *,
+    block_rows: int,
+):
+    out = jnp.take(storage, indices, axis=0)
+    blk = indices.astype(jnp.int32) // block_rows
+    new_counts = counts.at[blk].add(1)
+    return out, new_counts

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e-256 single pod (16x16) or 2 pods (2x16x16).
+
+    Axes: "pod" is the outer data-parallel axis (gradient all-reduce crosses
+    pods once per step over DCN); "data" is FSDP + batch; "model" is tensor/
+    expert parallel (stays inside a pod's ICI torus).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests (e.g. (2,4) on 8 host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

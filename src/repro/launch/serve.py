@@ -1,0 +1,96 @@
+"""Batched serving driver: prefill a prompt batch, decode N tokens, with
+tiered-KV-cache telemetry (per-page attention mass -> hot-page promotion
+report, the serving analogue of Table 1).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core import TPU_V5E_SYSTEM
+from repro.core.metrics import pages_for_access_fraction
+from repro.models.model import init_params
+from repro.serve import engine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page granularity for tiering telemetry")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.frontend == "embeddings":
+        cfg = type(cfg)(**{**cfg.__dict__, "frontend": "tokens"})
+    params = init_params(cfg, jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                       (args.batch, args.prompt_len)))
+    max_len = args.prompt_len + args.gen
+
+    t0 = time.time()
+    prefill_jit = jax.jit(lambda p, t: engine.prefill(p, cfg, tokens=t,
+                                                      max_len=max_len))
+    logits, cache = prefill_jit(params, prompts)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.0f}ms "
+          f"({args.batch * args.prompt_len / t_prefill:.0f} tok/s)")
+
+    page_mass = None
+    has_kv = cfg.family in ("attn", "moe")
+    decode_jit = jax.jit(lambda p, c, t: engine.decode_step(
+        p, cfg, c, t, page_size=args.page_size if has_kv else 0))
+
+    tokens = jnp.argmax(logits, -1).astype(jnp.int32)
+    out_tokens = [tokens]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache, aux = decode_jit(params, cache, tokens)
+        tokens = jnp.argmax(logits, -1).astype(jnp.int32)
+        out_tokens.append(tokens)
+        if has_kv and "kv_page_mass" in aux:
+            m = np.asarray(aux["kv_page_mass"], np.float64).sum((0, 1))
+            page_mass = m if page_mass is None else page_mass + m
+    jax.block_until_ready(tokens)
+    t_dec = time.time() - t0
+    gen = np.stack([np.asarray(t) for t in out_tokens], 1)
+    print(f"decode: {args.gen - 1} steps in {t_dec*1e3:.0f}ms "
+          f"({args.batch * (args.gen - 1) / max(t_dec, 1e-9):.0f} tok/s)")
+    print(f"sample generation (row 0): {gen[0][:16].tolist()}")
+
+    if page_mass is not None:
+        frac = pages_for_access_fraction(page_mass, 0.90)
+        k = max(int(len(page_mass) * 0.25), 1)
+        hot = np.argsort(-page_mass)[:k]
+        covered = page_mass[hot].sum() / max(page_mass.sum(), 1e-9)
+        print(f"[kv-tiering] {len(page_mass)} pages/seq: top {frac:.0%} of "
+              f"pages carry 90% of attention mass; keeping 25% of pages "
+              f"fast-tier covers {covered:.0%} of mass")
+        sysm = TPU_V5E_SYSTEM
+        bpa = cfg.n_kv_heads * cfg.head_dim * 2 * 2  # k+v bf16 per token read
+        n = page_mass.sum()
+        t_tier = sysm.access_time_s(covered * n, (1 - covered) * n, bpa)
+        t_fast = sysm.access_time_s(n, 0, bpa)
+        print(f"[kv-tiering] modeled cache-read time: tiered(25% fast)="
+              f"{t_tier*1e6:.1f}us vs all-HBM={t_fast*1e6:.1f}us "
+              f"(footprint 4x smaller)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

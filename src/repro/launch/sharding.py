@@ -1,0 +1,189 @@
+"""Logical-axis -> mesh-axis rules and input/cache/opt-state shardings.
+
+The model schema labels every parameter dim with a *logical* axis
+("embed", "heads", "mlp", "vocab", "experts", ...).  One rules table maps
+those to physical mesh axes; per-arch overrides (e.g. Mixtral's experts)
+come from the config module.  Batch/cache shardings are derived here too,
+so dryrun/train/serve all agree.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.model import ModelConfig, param_pspecs
+
+
+def default_rules(mesh: Mesh, cfg: ModelConfig) -> Dict[Optional[str], object]:
+    """FSDP over "data", tensor parallel over "model", DP over "pod"+"data".
+
+    kv_heads shard over "model" only when divisible; experts shard over
+    "model" when divisible (EP), else expert-TP via the d_expert axis.
+    """
+    model_size = mesh.shape.get("model", 1)
+    rules: Dict[Optional[str], object] = {
+        None: None,
+        "layers": None,
+        "embed": "data",          # FSDP / ZeRO-3: gather at use
+        "heads": "model",
+        "kv_heads": "model" if cfg.n_kv_heads % model_size == 0 else None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": None,
+        "expert_mlp": "model",
+    }
+    if cfg.moe is not None and cfg.moe.n_experts % model_size == 0:
+        rules["experts"] = "model"     # expert parallelism
+        rules["expert_mlp"] = None
+    # heads not divisible by model axis (e.g. qwen2 14H, musicgen 24H on 16):
+    # fall back to FSDP-only sharding for head-dims
+    if (cfg.n_heads * cfg.head_dim) % model_size != 0:
+        rules["heads"] = None
+    if cfg.n_heads % model_size != 0 and (cfg.n_heads * cfg.head_dim) % model_size == 0:
+        # shard the fused head*dim axis anyway (it is a single matrix dim)
+        rules["heads"] = "model"
+    return rules
+
+
+def apply_overrides(rules: dict, overrides: dict) -> dict:
+    out = dict(rules)
+    out.update(overrides)
+    return out
+
+
+def batch_axes(mesh: Mesh, batch_size: int | None = None):
+    """Mesh axes the batch dim shards over: the largest prefix of
+    ("pod","data") whose size divides the batch (None if nothing fits —
+    e.g. long_500k's global_batch=1)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if batch_size is not None:
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if batch_size % prod == 0:
+                break
+            axes = axes[1:]
+        if not axes:
+            return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _maybe(axis, dim_size, mesh):
+    """axis if it divides dim_size else None."""
+    if axis is None:
+        return None
+    sz = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        sz *= mesh.shape[a]
+    return axis if dim_size % sz == 0 else None
+
+
+def batch_pspec(mesh: Mesh, batch_size: int | None = None) -> P:
+    return P(batch_axes(mesh, batch_size))
+
+
+def batch_specs(mesh: Mesh, cfg: ModelConfig, batch_shapes: dict) -> dict:
+    """PartitionSpecs for a training batch dict (leading dim = batch)."""
+    specs = {}
+    for k, v in batch_shapes.items():
+        nd = len(v.shape)
+        if k == "positions" and nd == 3:      # mrope (3, B, S): batch is dim 1
+            b = batch_axes(mesh, v.shape[1])
+            specs[k] = P(None, b, None)
+        else:
+            b = batch_axes(mesh, v.shape[0])
+            specs[k] = P(b, *((None,) * (nd - 1)))
+    return specs
+
+
+def cache_pspecs(mesh: Mesh, cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Shardings for the serving cache.
+
+    KV caches: batch over ("pod","data") when divisible; KV heads over
+    "model" when divisible, else the sequence dim takes "model".  (§Perf C4
+    tried head-dim sharding to keep the positional update a local DUS —
+    refuted: SPMD still select-rewrites, and the hd-contracted score dots
+    add 56x collective bytes.  The remaining seq-sharded-update rewrite is
+    a known SPMD lowering gap; the production fix is a paged cache, noted
+    in DESIGN.md.)  When the batch cannot shard (long_500k, B=1) the
+    sequence dim also absorbs the data axes."""
+    b = batch_axes(mesh, batch)
+    kvh_ax = _maybe("model", cfg.n_kv_heads, mesh)
+    hd_ax = None
+    seq_candidates = []
+    if kvh_ax is None:
+        seq_candidates.append("model")
+    if b is None:
+        seq_candidates.extend(a for a in ("pod", "data") if a in mesh.shape)
+    seq_ax = _maybe(tuple(seq_candidates) if len(seq_candidates) > 1
+                    else (seq_candidates[0] if seq_candidates else None),
+                    max_len, mesh)
+    pos = P(b)
+
+    if cfg.family in ("attn", "moe"):
+        kv = P(None, b, kvh_ax, seq_ax, hd_ax)
+        return {"k": kv, "v": kv, "pos": pos}
+    if cfg.family == "rwkv6":
+        h_ax = _maybe("model", cfg.d_model // 64, mesh)
+        return {
+            "wkv": P(None, b, h_ax, None, None),
+            "sh_mix": P(None, b, None),
+            "sh_ffn": P(None, b, None),
+            "pos": pos,
+        }
+    if cfg.family == "zamba2":
+        kv = P(None, b, kvh_ax, seq_ax, hd_ax)
+        return {
+            "ssm": P(None, b, _maybe("model", cfg.mamba_heads, mesh), None, None),
+            "conv": P(None, b, None, _maybe("model", cfg.d_inner + 2 * cfg.ssm_state, mesh)),
+            "k": kv, "v": kv, "pos": pos,
+        }
+    raise ValueError(cfg.family)
+
+
+def named(mesh: Mesh, tree_pspecs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def model_pspecs(mesh: Mesh, cfg: ModelConfig, overrides: Optional[dict] = None):
+    rules = apply_overrides(default_rules(mesh, cfg), overrides or {})
+    return param_pspecs(cfg, rules)
+
+
+def opt_pspecs(param_specs, opt_state):
+    """Optimizer state mirrors parameter sharding (m/v same shape; adafactor
+    factored stats drop the last/second-to-last dim)."""
+    from jax.sharding import PartitionSpec as P
+
+    def one(path_spec, leaf):
+        return path_spec
+
+    # adamw: {"m": tree, "v": tree} same structure as params
+    def map_like(tree):
+        if isinstance(tree, dict) and set(tree) == {"m", "v"}:
+            return {"m": param_specs, "v": param_specs}
+        return None
+
+    mapped = map_like(opt_state.inner)
+    if mapped is not None:
+        return type(opt_state)(P(), mapped)
+
+    # adafactor: per-leaf dict {"vr","vc"} or {"v"}
+    def factored(spec, state_leaf):
+        if "v" in state_leaf:
+            return {"v": spec}
+        vr = P(*spec[:-1]) if len(spec) else P()
+        vc = P(*(spec[:-2] + spec[-1:])) if len(spec) >= 2 else P()
+        return {"vr": vr, "vc": vc}
+
+    inner = jax.tree.map(
+        factored, param_specs, opt_state.inner,
+        is_leaf=lambda x: isinstance(x, P) or (
+            isinstance(x, dict) and ("v" in x or "vr" in x)),
+    )
+    return type(opt_state)(P(), inner)

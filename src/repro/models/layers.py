@@ -1,0 +1,123 @@
+"""Shared building blocks: norms, RoPE/M-RoPE, SwiGLU, attention block."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, d); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions_3d: jax.Array, sections=(16, 24, 24),
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Qwen2-VL M-RoPE: the rotary dims are split into (t, h, w) sections,
+    each rotated by its own position stream.  x: (B, H, S, d);
+    positions_3d: (3, B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)                       # (half,)
+    # build a (B, S, half) angle tensor with per-section position ids
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        f = freqs[start:start + sec]
+        ang = positions_3d[i][..., None].astype(jnp.float32) * f   # (B,S,sec)
+        parts.append(ang)
+        start += sec
+    angles = jnp.concatenate(parts, axis=-1)[:, None]  # (B,1,S,half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- SwiGLU
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    g = jnp.einsum("bsd,df->bsf", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, w_up.astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, w_down.astype(x.dtype))
+
+
+# ------------------------------------------------------------ attention block
+class AttnParams(NamedTuple):
+    wq: jax.Array            # (D, H*hd)
+    wk: jax.Array            # (D, KVH*hd)
+    wv: jax.Array            # (D, KVH*hd)
+    wo: jax.Array            # (H*hd, D)
+    bq: Optional[jax.Array]  # (H*hd,) or None (qwen2 QKV bias)
+    bk: Optional[jax.Array]
+    bv: Optional[jax.Array]
+
+
+def attention_block(
+    x: jax.Array,                # (B, S, D)
+    p: AttnParams,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    positions: jax.Array,        # (B, S) or (3, B, S) for mrope
+    rope_mode: str = "rope",     # "rope" | "mrope" | "none"
+    rope_theta: float = 10000.0,
+    window: int | None = None,
+    causal_schedule: str = "masked",
+    block_k: int = 512,
+    return_kv: bool = False,
+):
+    b, s, d_model = x.shape
+    dt = x.dtype
+
+    def proj(w, bias, nh):
+        y = jnp.einsum("bsd,dh->bsh", x, w.astype(dt))
+        if bias is not None:
+            y = y + bias.astype(dt)
+        return y.reshape(b, s, nh, head_dim).transpose(0, 2, 1, 3)
+
+    q = proj(p.wq, p.bq, n_heads)          # (B,H,S,hd)
+    k = proj(p.wk, p.bk, n_kv_heads)
+    v = proj(p.wv, p.bv, n_kv_heads)
+
+    if rope_mode == "rope":
+        q = apply_rope(q, positions[:, None], rope_theta)
+        k = apply_rope(k, positions[:, None], rope_theta)
+    elif rope_mode == "mrope":
+        half = head_dim // 2
+        sections = (half - 2 * (half * 3 // 8), half * 3 // 8, half * 3 // 8)
+        q = apply_mrope(q, positions, sections, rope_theta)
+        k = apply_mrope(k, positions, sections, rope_theta)
+
+    o = attn_lib.flash_train(
+        q, k, v, causal=True, window=window,
+        causal_schedule=causal_schedule, block_k=block_k,
+    )                                       # (B,H,S,hd)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+    out = jnp.einsum("bsh,hd->bsd", o, p.wo.astype(dt))
+    if return_kv:
+        return out, (k, v)
+    return out

@@ -1,0 +1,167 @@
+"""Mamba-2 (SSD) block — chunked state-space duality formulation.
+
+    h_t = a_t h_{t-1} + dt_t * x_t B_t^T      (per head; a_t = exp(-exp(A)dt))
+    y_t = C_t h_t + D * x_t
+
+Chunked exactly like the RWKV6 path: intra-chunk pairwise decays are
+exp(non-positive sums); inter-chunk state (H, P, N) carried by lax.scan.
+Used standalone (a pure-Mamba model) and inside Zamba2 hybrid blocks.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Mamba2Params(NamedTuple):
+    in_proj: jax.Array    # (D, 2*d_inner + 2*N + H)   [z, x, B, C, dt] (1 group)
+    conv_w: jax.Array     # (4, d_inner + 2*N)         depthwise conv kernel
+    conv_b: jax.Array     # (d_inner + 2*N,)
+    a_log: jax.Array      # (H,)
+    d_skip: jax.Array     # (H,)
+    dt_bias: jax.Array    # (H,)
+    norm: jax.Array       # (d_inner,) gated RMSNorm scale
+    out_proj: jax.Array   # (d_inner, D)
+
+
+def _depthwise_conv(x, w, b):
+    """Causal depthwise conv, kernel 4.  x: (B, S, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def mamba2_mix(
+    x: jax.Array,              # (B, S, D)
+    p: Mamba2Params,
+    state: jax.Array | None = None,   # (B, H, P, N)
+    conv_state: jax.Array | None = None,  # unused in train (full conv)
+    *,
+    d_inner: int,
+    n_heads: int,
+    d_state: int,
+    chunk: int = 64,
+    eps: float = 1e-5,
+):
+    """Returns (out (B,S,D), final_state)."""
+    b, s, d = x.shape
+    hp = d_inner // n_heads  # head dim P
+    n = d_state
+    dt_ = x.dtype
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p.in_proj.astype(dt_))
+    z, xin, bc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * n], axis=-1)
+    xbc = jnp.concatenate([xin, bc], axis=-1)
+    xbc = jax.nn.silu(_depthwise_conv(xbc, p.conv_w.astype(dt_), p.conv_b.astype(dt_)))
+    xin, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias.astype(jnp.float32))
+    loga = -jnp.exp(p.a_log.astype(jnp.float32))          # (H,) negative
+    lw = dt * loga[None, None, :]                         # (B,S,H) log decay <= 0
+
+    xh = xin.reshape(b, s, n_heads, hp).astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)                       # (B,S,N) single group
+    cmat = cmat.astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((b, n_heads, hp, n), jnp.float32)
+
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+
+    xc = xh.reshape(b, nc, chunk, n_heads, hp).transpose(1, 0, 3, 2, 4)   # (nc,B,H,L,P)
+    bc_ = bmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)             # (nc,B,L,N)
+    cc_ = cmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    lc = lw.reshape(b, nc, chunk, n_heads).transpose(1, 0, 3, 2)          # (nc,B,H,L)
+    dc = dt.reshape(b, nc, chunk, n_heads).transpose(1, 0, 3, 2)
+
+    def step(S, xs):
+        xx, bb, cc, ll, dd = xs               # (B,H,L,P) (B,L,N) (B,L,N) (B,H,L) (B,H,L)
+        cs = jnp.cumsum(ll, axis=-1)          # inclusive
+        # intra: scores[t,j] = C_t.B_j * exp(cs_t - cs_j) * dt_j,  j <= t
+        pair = cs[:, :, :, None] - cs[:, :, None, :]          # (B,H,L,L)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        pair = jnp.where(tri[None, None], pair, -jnp.inf)
+        cb = jnp.einsum("btn,bjn->btj", cc, bb)               # (B,L,L)
+        scores = jnp.exp(pair) * cb[:, None] * dd[:, :, None, :]
+        o = jnp.einsum("bhtj,bhjp->bhtp", scores, xx)
+        # carried state: y_t += C_t (exp(cs_t) S)
+        o = o + jnp.einsum("btn,bhpn,bht->bhtp", cc, S, jnp.exp(cs))
+        # state update
+        last = cs[:, :, -1:]
+        S_new = S * jnp.exp(last)[..., None] + jnp.einsum(
+            "bhl,bhlp,bln->bhpn", jnp.exp(last - cs) * dd, xx, bb)
+        return S_new, o
+
+    # checkpoint: intra-chunk (L,L) score tensors recomputed in bwd
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    state, oc = jax.lax.scan(step, state, (xc, bc_, cc_, lc, dc))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(b, s + pad, n_heads, hp)[:, :s]
+
+    # D skip + gated RMSNorm + out proj
+    o = o + xh[:, :s] * p.d_skip.astype(jnp.float32)[None, None, :, None]
+    o = o.reshape(b, s, d_inner)
+    zf = z.astype(jnp.float32)
+    o = o * jax.nn.silu(zf)
+    var = jnp.mean(o * o, axis=-1, keepdims=True)
+    o = o * jax.lax.rsqrt(var + eps) * p.norm.astype(jnp.float32)
+    return jnp.einsum("bse,ed->bsd", o.astype(dt_), p.out_proj.astype(dt_)), state
+
+
+# ----------------------------------------------------------- single-token step
+def mamba2_mix_step(
+    x: jax.Array,            # (B, D) current (already layer-normed)
+    conv_state: jax.Array,   # (B, k-1, conv_ch) previous pre-conv inputs
+    state: jax.Array,        # (B, H, P, N) f32
+    p: Mamba2Params,
+    *,
+    d_inner: int,
+    n_heads: int,
+    d_state: int,
+    eps: float = 1e-5,
+):
+    """One decode step.  Returns (out (B,D), new_conv_state, new_state)."""
+    b, d = x.shape
+    hp = d_inner // n_heads
+    n = d_state
+    dt_ = x.dtype
+
+    zxbcdt = jnp.einsum("bd,de->be", x, p.in_proj.astype(dt_))
+    z, xin, bc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * n], axis=-1)
+    xbc = jnp.concatenate([xin, bc], axis=-1)              # (B, conv_ch)
+
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)   # (B, k, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p.conv_w.astype(dt_)) \
+        + p.conv_b.astype(dt_)
+    xbc_act = jax.nn.silu(conv_out)
+    new_conv_state = window[:, 1:]
+
+    xin2, bmat, cmat = jnp.split(xbc_act, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias.astype(jnp.float32))
+    a = jnp.exp(dt * (-jnp.exp(p.a_log.astype(jnp.float32)))[None, :])  # (B,H)
+
+    xh = xin2.reshape(b, n_heads, hp).astype(jnp.float32)
+    bmf = bmat.astype(jnp.float32)                         # (B, N)
+    cmf = cmat.astype(jnp.float32)
+
+    state = state * a[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, bmf)
+    o = jnp.einsum("bn,bhpn->bhp", cmf, state)
+    o = o + xh * p.d_skip.astype(jnp.float32)[None, :, None]
+    o = o.reshape(b, d_inner)
+    o = o * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(o * o, axis=-1, keepdims=True)
+    o = o * jax.lax.rsqrt(var + eps) * p.norm.astype(jnp.float32)
+    return jnp.einsum("be,ed->bd", o.astype(dt_), p.out_proj.astype(dt_)), \
+        new_conv_state, state

@@ -1,0 +1,504 @@
+"""Unified causal LM covering all 10 assigned architectures.
+
+One ``ModelConfig`` describes any family:
+  * ``attn``   — dense decoder-only transformers (llama3.2, qwen2, internlm2,
+                 yi, musicgen [audio frontend stub], qwen2-vl [patch stub])
+  * ``moe``    — routed-FFN transformers (mixtral [SWA], kimi-k2 [384e
+                 shared-expert])
+  * ``rwkv6``  — attention-free (RWKV-6 Finch)
+  * ``zamba2`` — Mamba2 backbone + shared attention block every N layers
+
+Parameters are generated from a single **schema walk** that yields, per leaf:
+shape, dtype, init scale and *logical* sharding axes — so ``init_params``,
+``abstract_params`` (dry-run, no allocation) and ``param_pspecs`` (GSPMD)
+always agree by construction.
+
+Forward paths: ``forward`` (teacher-forced logits/loss features, scan over
+layers + configurable remat), ``prefill`` (returns KV/SSM caches), and
+``decode_step`` (one token, updates caches) live in serve/steps modules built
+on the block functions here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn_lib
+from .layers import AttnParams, attention_block, rms_norm, swiglu
+from .moe import MoEParams, moe_block
+from .rwkv6 import RWKV6FFNParams, RWKV6Params, rwkv6_channel_mix, rwkv6_mix
+from .mamba2 import Mamba2Params, mamba2_mix
+
+
+# =============================================================== configuration
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # attn | moe | rwkv6 | zamba2
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    qkv_bias: bool = False
+    window: Optional[int] = None    # sliding-window attention (mixtral)
+    rope: str = "rope"              # rope | mrope | none
+    rope_theta: float = 10000.0
+    moe: Optional[MoECfg] = None
+    ssm_state: int = 64             # zamba2
+    zamba_attn_every: int = 6
+    frontend: str = "tokens"        # tokens | embeddings (audio/vlm stubs)
+    param_dtype: Any = jnp.float32
+    activ_dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-5
+    causal_schedule: str = "triangular"  # triangular (default; exact-FLOPs)
+                                         # | masked (paper-agnostic baseline)
+    attn_block_k: int = 512
+    loss_chunk: int = 256           # chunked-vocab loss: per scan step logits are (B, loss_chunk, V)
+    remat: str = "full"             # full | dots | none
+    sub_quadratic: bool = False     # eligible for long_500k
+    tie_embeddings: bool = False
+    # mesh axes the activation batch dim shards over (set by the launcher;
+    # None = no explicit constraint, e.g. single-device runs)
+    act_batch_axes: Optional[Tuple[str, ...]] = None
+    # MoE group-local routing: (prod(batch axes), model axis size), and
+    # whether experts are sharded over "model" (EP) — set by the launcher
+    moe_groups: Optional[Tuple[int, int]] = None
+    moe_expert_sharded: bool = False
+
+    @property
+    def d_inner(self) -> int:       # zamba2 mamba expansion
+        return 2 * self.d_model
+
+    @property
+    def mamba_heads(self) -> int:
+        return self.d_inner // 64
+
+    @property
+    def n_shared_attn(self) -> int:
+        return self.n_layers // self.zamba_attn_every
+
+    def param_count(self) -> int:
+        total = 0
+        for _, spec in iter_schema(self):
+            total += int(np.prod(spec.shape))
+        return total
+
+
+# ============================================================== schema leaves
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    init: str = "normal"            # normal | zeros | ones | small_normal
+    dtype: Any = None               # default: cfg.param_dtype
+
+
+def _attn_leaves(cfg: ModelConfig, prefix: str, stacked: bool) -> Dict[str, LeafSpec]:
+    L = (cfg.n_layers,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    leaves = {
+        f"{prefix}wq": LeafSpec(L + (d, h * hd), lax_ + ("embed", "heads")),
+        f"{prefix}wk": LeafSpec(L + (d, kvh * hd), lax_ + ("embed", "kv_heads")),
+        f"{prefix}wv": LeafSpec(L + (d, kvh * hd), lax_ + ("embed", "kv_heads")),
+        f"{prefix}wo": LeafSpec(L + (h * hd, d), lax_ + ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        leaves |= {
+            f"{prefix}bq": LeafSpec(L + (h * hd,), lax_ + ("heads",), "zeros"),
+            f"{prefix}bk": LeafSpec(L + (kvh * hd,), lax_ + ("kv_heads",), "zeros"),
+            f"{prefix}bv": LeafSpec(L + (kvh * hd,), lax_ + ("kv_heads",), "zeros"),
+        }
+    return leaves
+
+
+def _mlp_leaves(cfg: ModelConfig, prefix: str = "") -> Dict[str, LeafSpec]:
+    L, lax_ = (cfg.n_layers,), ("layers",)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        f"{prefix}w_gate": LeafSpec(L + (d, f), lax_ + ("embed", "mlp")),
+        f"{prefix}w_up": LeafSpec(L + (d, f), lax_ + ("embed", "mlp")),
+        f"{prefix}w_down": LeafSpec(L + (f, d), lax_ + ("mlp", "embed")),
+    }
+
+
+def iter_schema(cfg: ModelConfig):
+    """Yields (path, LeafSpec) for every parameter of the model."""
+    d, v = cfg.d_model, cfg.vocab_size
+    L, lax_ = (cfg.n_layers,), ("layers",)
+
+    # token embeddings always exist (embedding-frontend archs still embed
+    # generated tokens at decode time; the modality frontend is the stub)
+    yield "embed", LeafSpec((v, d), ("vocab", "embed"))
+    yield "final_norm", LeafSpec((d,), (None,), "ones")
+    if not cfg.tie_embeddings:
+        yield "lm_head", LeafSpec((d, v), ("embed", "vocab"))
+
+    fam = cfg.family
+    if fam in ("attn", "moe"):
+        yield from _attn_leaves(cfg, "blocks.", True).items()
+        yield "blocks.ln1", LeafSpec(L + (d,), lax_ + (None,), "ones")
+        yield "blocks.ln2", LeafSpec(L + (d,), lax_ + (None,), "ones")
+        if fam == "attn":
+            yield from _mlp_leaves(cfg, "blocks.").items()
+        else:
+            m = cfg.moe
+            e, fe = m.n_experts, m.d_expert
+            yield "blocks.router", LeafSpec(L + (d, e), lax_ + ("embed", None), "small_normal")
+            yield "blocks.e_gate", LeafSpec(L + (e, d, fe), lax_ + ("experts", "embed", "expert_mlp"))
+            yield "blocks.e_up", LeafSpec(L + (e, d, fe), lax_ + ("experts", "embed", "expert_mlp"))
+            yield "blocks.e_down", LeafSpec(L + (e, fe, d), lax_ + ("experts", "expert_mlp", "embed"))
+            if m.n_shared:
+                fs = m.d_expert * m.n_shared
+                yield "blocks.s_gate", LeafSpec(L + (d, fs), lax_ + ("embed", "mlp"))
+                yield "blocks.s_up", LeafSpec(L + (d, fs), lax_ + ("embed", "mlp"))
+                yield "blocks.s_down", LeafSpec(L + (fs, d), lax_ + ("mlp", "embed"))
+
+    elif fam == "rwkv6":
+        yield "blocks.ln1", LeafSpec(L + (d,), lax_ + (None,), "ones")
+        yield "blocks.ln2", LeafSpec(L + (d,), lax_ + (None,), "ones")
+        yield "blocks.tm_mu", LeafSpec(L + (5, d), lax_ + (None, None), "zeros")
+        yield "blocks.tm_lora_a", LeafSpec(L + (d, 32), lax_ + ("embed", None), "small_normal")
+        yield "blocks.tm_lora_b", LeafSpec(L + (5, 32, d), lax_ + (None, None, "embed"), "zeros")
+        yield "blocks.w0", LeafSpec(L + (d,), lax_ + (None,), "ones")
+        yield "blocks.w_lora_a", LeafSpec(L + (d, 64), lax_ + ("embed", None), "small_normal")
+        yield "blocks.w_lora_b", LeafSpec(L + (64, d), lax_ + (None, "embed"), "zeros")
+        yield "blocks.u", LeafSpec(L + (d,), lax_ + (None,), "zeros")
+        for w in ("wr", "wk", "wv", "wg", "wo"):
+            yield f"blocks.{w}", LeafSpec(L + (d, d), lax_ + ("embed", "heads"))
+        yield "blocks.ln_x", LeafSpec(L + (d,), lax_ + (None,), "ones")
+        yield "blocks.f_mu_k", LeafSpec(L + (d,), lax_ + (None,), "zeros")
+        yield "blocks.f_mu_r", LeafSpec(L + (d,), lax_ + (None,), "zeros")
+        yield "blocks.f_wk", LeafSpec(L + (d, cfg.d_ff), lax_ + ("embed", "mlp"))
+        yield "blocks.f_wv", LeafSpec(L + (cfg.d_ff, d), lax_ + ("mlp", "embed"))
+        yield "blocks.f_wr", LeafSpec(L + (d, d), lax_ + ("embed", "heads"))
+
+    elif fam == "zamba2":
+        di, n = cfg.d_inner, cfg.ssm_state
+        h = cfg.mamba_heads
+        conv_ch = di + 2 * n
+        yield "blocks.ln1", LeafSpec(L + (d,), lax_ + (None,), "ones")
+        yield "blocks.in_proj", LeafSpec(L + (d, 2 * di + 2 * n + h), lax_ + ("embed", "mlp"))
+        yield "blocks.conv_w", LeafSpec(L + (4, conv_ch), lax_ + (None, "mlp"), "small_normal")
+        yield "blocks.conv_b", LeafSpec(L + (conv_ch,), lax_ + ("mlp",), "zeros")
+        yield "blocks.a_log", LeafSpec(L + (h,), lax_ + (None,), "ones")
+        yield "blocks.d_skip", LeafSpec(L + (h,), lax_ + (None,), "ones")
+        yield "blocks.dt_bias", LeafSpec(L + (h,), lax_ + (None,), "zeros")
+        yield "blocks.norm", LeafSpec(L + (di,), lax_ + (None,), "ones")
+        yield "blocks.out_proj", LeafSpec(L + (di, d), lax_ + ("mlp", "embed"))
+        # shared transformer block (attention + MLP, applied every
+        # zamba_attn_every layers) with per-invocation LoRA adapters on q/k/v
+        # — mamba layers themselves carry no MLP (that is what keeps Zamba2
+        # at 2.7B despite 54 layers)
+        ninv = cfg.n_shared_attn
+        for k, spec in _attn_leaves(cfg, "shared_attn.", False).items():
+            yield k, spec
+        yield "shared_attn.ln", LeafSpec((d,), (None,), "ones")
+        yield "shared_attn.ln_mlp", LeafSpec((d,), (None,), "ones")
+        yield "shared_attn.w_gate", LeafSpec((d, cfg.d_ff), ("embed", "mlp"))
+        yield "shared_attn.w_up", LeafSpec((d, cfg.d_ff), ("embed", "mlp"))
+        yield "shared_attn.w_down", LeafSpec((cfg.d_ff, d), ("mlp", "embed"))
+        r = 32
+        for nm in ("q", "k", "v"):
+            yield f"shared_attn.lora_{nm}_a", LeafSpec(
+                (ninv, d, r), (None, "embed", None), "small_normal")
+            yield f"shared_attn.lora_{nm}_b", LeafSpec(
+                (ninv, r, d), (None, None, "heads"), "zeros")
+    else:
+        raise ValueError(cfg.family)
+
+
+# ----------------------------------------------------------- schema consumers
+def _set(tree: dict, path: str, val):
+    parts = path.split(".")
+    for p in parts[:-1]:
+        tree = tree.setdefault(p, {})
+    tree[parts[-1]] = val
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> dict:
+    tree: dict = {}
+    leaves = list(iter_schema(cfg))
+    keys = jax.random.split(rng, len(leaves))
+    for (path, spec), key in zip(leaves, keys):
+        dt = spec.dtype or cfg.param_dtype
+        if spec.init == "zeros":
+            val = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            val = jnp.ones(spec.shape, dt)
+        else:
+            scale = 0.02 if spec.init == "normal" else 0.006
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            scale = min(scale, fan_in ** -0.5)
+            val = (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dt)
+        _set(tree, path, val)
+    return tree
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    tree: dict = {}
+    for path, spec in iter_schema(cfg):
+        _set(tree, path, jax.ShapeDtypeStruct(spec.shape, spec.dtype or cfg.param_dtype))
+    return tree
+
+
+def param_pspecs(cfg: ModelConfig, rules: Dict[Optional[str], Any]) -> dict:
+    from jax.sharding import PartitionSpec as P
+    tree: dict = {}
+    for path, spec in iter_schema(cfg):
+        axes = tuple(rules.get(a) for a in spec.logical_axes)
+        _set(tree, path, P(*axes))
+    return tree
+
+
+# ================================================================ block passes
+def _attn_params(bp: dict, cfg: ModelConfig) -> AttnParams:
+    return AttnParams(
+        wq=bp["wq"], wk=bp["wk"], wv=bp["wv"], wo=bp["wo"],
+        bq=bp.get("bq"), bk=bp.get("bk"), bv=bp.get("bv"),
+    )
+
+
+def transformer_block(x, bp, cfg: ModelConfig, positions):
+    """One dense/moe transformer layer. Returns (x, aux) with aux = expert
+    counts (E,) for moe, else None."""
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    h = attention_block(
+        h, _attn_params(bp, cfg),
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        positions=positions, rope_mode=cfg.rope, rope_theta=cfg.rope_theta,
+        window=cfg.window, causal_schedule=cfg.causal_schedule,
+        block_k=cfg.attn_block_k,
+    )
+    x = x + h
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        mp = MoEParams(
+            router=bp["router"], w_gate=bp["e_gate"], w_up=bp["e_up"],
+            w_down=bp["e_down"],
+            shared_w_gate=bp.get("s_gate"), shared_w_up=bp.get("s_up"),
+            shared_w_down=bp.get("s_down"),
+        )
+        bax = None
+        if cfg.act_batch_axes:
+            bax = (tuple(cfg.act_batch_axes) if len(cfg.act_batch_axes) > 1
+                   else cfg.act_batch_axes[0])
+        h, moe_aux = moe_block(
+            h, mp, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+            groups=cfg.moe_groups or (1, 1), batch_axes=bax,
+            expert_sharded=cfg.moe_expert_sharded)
+        return x + h, moe_aux
+    h = swiglu(h, bp["w_gate"], bp["w_up"], bp["w_down"])
+    return x + h, None
+
+
+def rwkv6_block(x, bp, cfg: ModelConfig, state=None):
+    p = RWKV6Params(
+        tm_mu=bp["tm_mu"], tm_lora_a=bp["tm_lora_a"], tm_lora_b=bp["tm_lora_b"],
+        w0=bp["w0"], w_lora_a=bp["w_lora_a"], w_lora_b=bp["w_lora_b"], u=bp["u"],
+        wr=bp["wr"], wk=bp["wk"], wv=bp["wv"], wg=bp["wg"], wo=bp["wo"],
+        ln_x=bp["ln_x"],
+    )
+    n_heads = cfg.d_model // 64
+    h, state = rwkv6_mix(rms_norm(x, bp["ln1"], cfg.norm_eps), p, state,
+                         n_heads=n_heads)
+    x = x + h
+    fp = RWKV6FFNParams(mu_k=bp["f_mu_k"], mu_r=bp["f_mu_r"],
+                        wk=bp["f_wk"], wv=bp["f_wv"], wr=bp["f_wr"])
+    x = x + rwkv6_channel_mix(rms_norm(x, bp["ln2"], cfg.norm_eps), fp)
+    return x, state
+
+
+def zamba2_mamba_block(x, bp, cfg: ModelConfig, state=None):
+    p = Mamba2Params(
+        in_proj=bp["in_proj"], conv_w=bp["conv_w"], conv_b=bp["conv_b"],
+        a_log=bp["a_log"], d_skip=bp["d_skip"], dt_bias=bp["dt_bias"],
+        norm=bp["norm"], out_proj=bp["out_proj"],
+    )
+    h, state = mamba2_mix(rms_norm(x, bp["ln1"], cfg.norm_eps), p, state,
+                          d_inner=cfg.d_inner, n_heads=cfg.mamba_heads,
+                          d_state=cfg.ssm_state)
+    return x + h, state
+
+
+def zamba2_shared_attention(x, sp: dict, cfg: ModelConfig, inv: int, positions):
+    """Shared attention block with per-invocation LoRA deltas on q/k/v."""
+    def lora(nm):
+        a = jax.lax.dynamic_index_in_dim(sp[f"lora_{nm}_a"], inv, 0, keepdims=False)
+        b_ = jax.lax.dynamic_index_in_dim(sp[f"lora_{nm}_b"], inv, 0, keepdims=False)
+        return a, b_
+
+    h = rms_norm(x, sp["ln"], cfg.norm_eps)
+    deltas = {}
+    for nm in ("q", "k", "v"):
+        a, b_ = lora(nm)
+        deltas[nm] = jnp.einsum("bsd,dr,re->bse", h, a.astype(h.dtype),
+                                b_.astype(h.dtype))
+    p = AttnParams(wq=sp["wq"], wk=sp["wk"], wv=sp["wv"], wo=sp["wo"],
+                   bq=None, bk=None, bv=None)
+    # apply lora additively by adjusting the projections inline
+    b, s, d = h.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+
+    def proj(w, delta, n):
+        y = jnp.einsum("bsd,dh->bsh", h, w.astype(h.dtype)) + delta[..., : n * hd]
+        return y.reshape(b, s, n, hd).transpose(0, 2, 1, 3)
+
+    q = proj(p.wq, deltas["q"], nh)
+    k = proj(p.wk, deltas["k"], nkv)
+    v = proj(p.wv, deltas["v"], nkv)
+    from .layers import apply_rope
+    q = apply_rope(q, positions[:, None], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None], cfg.rope_theta)
+    o = attn_lib.flash_train(q, k, v, causal=True, window=cfg.window,
+                             causal_schedule=cfg.causal_schedule,
+                             block_k=cfg.attn_block_k)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    x = x + jnp.einsum("bsh,hd->bsd", o, p.wo.astype(h.dtype))
+    # shared MLP
+    hm = rms_norm(x, sp["ln_mlp"], cfg.norm_eps)
+    return x + swiglu(hm, sp["w_gate"], sp["w_up"], sp["w_down"])
+
+
+# ================================================================== forward
+def constrain_batch(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Pin the activation batch dim to the data axes (GSPMD otherwise may
+    propagate a weight layout onto the layer carry and replicate batch —
+    a 16x compute blowup we hit in the first dry-runs)."""
+    if not cfg.act_batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    axes = tuple(cfg.act_batch_axes)
+    b = axes if len(axes) > 1 else axes[0]
+    spec = P(b, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def forward(params: dict, cfg: ModelConfig, tokens=None, embeds=None,
+            positions=None) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Teacher-forced forward pass -> (hidden (B,S,D), aux).
+
+    aux["expert_counts"]: (L, E) for moe — the HMU-style telemetry feed.
+    """
+    if embeds is not None:
+        x = embeds.astype(cfg.activ_dtype)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activ_dtype)
+    x = constrain_batch(x, cfg)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+
+    aux: Dict[str, Any] = {}
+    policy = _remat_policy(cfg)
+
+    if cfg.family in ("attn", "moe"):
+        def body(x, bp):
+            x = constrain_batch(x, cfg)
+            x, moe_aux = transformer_block(x, bp, cfg, positions)
+            return constrain_batch(x, cfg), moe_aux
+        if policy is not None:
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+        x, moe_aux = jax.lax.scan(body, x, params["blocks"])
+        if cfg.family == "moe":
+            aux["expert_counts"] = moe_aux["counts"]      # (L, E) telemetry
+            aux["moe_aux_loss"] = moe_aux["aux_loss"].mean()
+
+    elif cfg.family == "rwkv6":
+        def body(x, bp):
+            x = constrain_batch(x, cfg)
+            x, _ = rwkv6_block(x, bp, cfg)
+            return constrain_batch(x, cfg), None
+        if policy is not None:
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+
+    elif cfg.family == "zamba2":
+        every = cfg.zamba_attn_every
+        ninv = cfg.n_shared_attn
+        blocks = params["blocks"]
+        # regroup stacked layers into (ninv, every, ...)
+        grouped = jax.tree.map(
+            lambda t: t.reshape((ninv, every) + t.shape[1:]), blocks)
+
+        def group_body(x, xs):
+            gp, inv = xs
+
+            def inner(x, bp):
+                x = constrain_batch(x, cfg)
+                x, _ = zamba2_mamba_block(x, bp, cfg)
+                return constrain_batch(x, cfg), None
+            if policy is not None:
+                inner = jax.checkpoint(inner, policy=policy, prevent_cse=False)
+            x, _ = jax.lax.scan(inner, x, gp)
+            x = zamba2_shared_attention(x, params["shared_attn"], cfg, inv, positions)
+            return x, None
+
+        if policy is not None:
+            group_body = jax.checkpoint(group_body, policy=policy, prevent_cse=False)
+        x, _ = jax.lax.scan(group_body, x, (grouped, jnp.arange(ninv)))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def logits_fn(params: dict, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", hidden, head.astype(hidden.dtype))
+
+
+def loss_fn(params: dict, cfg: ModelConfig, hidden: jax.Array,
+            labels: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Chunked-vocab softmax cross entropy (never materializes (B,S,V) in f32
+    all at once when loss_chunk < S)."""
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    b, s, d = hidden.shape
+    chunk = min(cfg.loss_chunk or s, s)
+    n_chunks = s // chunk if s % chunk == 0 else 1
+    if s % chunk != 0:
+        chunk = s
+    hs = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    ms = mask.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        h, lab, m = xs
+        logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)), (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

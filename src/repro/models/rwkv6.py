@@ -1,0 +1,222 @@
+"""RWKV-6 "Finch" — attention-free time mixing with data-dependent decay.
+
+Exact chunked formulation (GLA-style): within a chunk all pairwise decay
+factors are exp(negative sums) <= 1, so the math is numerically safe without
+rescaling tricks; the inter-chunk state is carried by lax.scan.
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+w_t in (0,1) per channel is data-dependent (lora on the shifted input);
+u is the per-channel "bonus" for the current token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+
+class RWKV6Params(NamedTuple):
+    # data-dependent token shift (ddlerp): 5 mixes (r,k,v,w,g)
+    tm_mu: jax.Array        # (5, D)
+    tm_lora_a: jax.Array    # (D, 32)
+    tm_lora_b: jax.Array    # (5, 32, D)
+    # decay
+    w0: jax.Array           # (D,)
+    w_lora_a: jax.Array     # (D, 64)
+    w_lora_b: jax.Array     # (64, D)
+    u: jax.Array            # (D,) bonus
+    wr: jax.Array           # (D, D)
+    wk: jax.Array           # (D, D)
+    wv: jax.Array           # (D, D)
+    wg: jax.Array           # (D, D)
+    wo: jax.Array           # (D, D)
+    ln_x: jax.Array         # (D,) per-head group norm scale
+
+
+def _token_shift(x):
+    """x_{t-1} with zero at t=0.  x: (B, S, D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _ddlerp(x, xprev, p: RWKV6Params):
+    """Data-dependent lerp between x_t and x_{t-1} -> 5 mixed streams."""
+    base = x + (xprev - x) * p.tm_mu[0].astype(x.dtype)  # mu_x feeds the lora
+    lora = jnp.tanh(jnp.einsum("bsd,dk->bsk", base, p.tm_lora_a.astype(x.dtype)))
+    mixes = []
+    for i in range(5):
+        adj = jnp.einsum("bsk,kd->bsd", lora, p.tm_lora_b[i].astype(x.dtype))
+        mu = p.tm_mu[i].astype(x.dtype) + adj
+        mixes.append(x + (xprev - x) * mu)
+    return mixes  # r,k,v,w,g streams
+
+
+def rwkv6_mix(
+    x: jax.Array,            # (B, S, D)
+    p: RWKV6Params,
+    state: jax.Array | None = None,   # (B, H, dk, dv) carry for decode
+    *,
+    n_heads: int,
+    chunk: int = 64,
+    eps: float = 1e-5,
+):
+    """Returns (out (B,S,D), final_state)."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    dt = x.dtype
+
+    xprev = _token_shift(x)
+    xr, xk, xv, xw, xg = _ddlerp(x, xprev, p)
+
+    r = jnp.einsum("bsd,de->bse", xr, p.wr.astype(dt))
+    k = jnp.einsum("bsd,de->bse", xk, p.wk.astype(dt))
+    v = jnp.einsum("bsd,de->bse", xv, p.wv.astype(dt))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p.wg.astype(dt)))
+
+    logw = -jnp.exp(
+        p.w0.astype(jnp.float32)
+        + jnp.einsum("bsd,dk,ke->bse", xw.astype(jnp.float32),
+                     p.w_lora_a.astype(jnp.float32), p.w_lora_b.astype(jnp.float32))
+    )  # (B,S,D) <= 0
+
+    # heads
+    def split(t_):
+        return t_.reshape(b, s, n_heads, hd)
+
+    r_, k_, v_ = split(r).astype(jnp.float32), split(k).astype(jnp.float32), \
+        split(v).astype(jnp.float32)
+    lw = logw.reshape(b, s, n_heads, hd)
+    u = p.u.astype(jnp.float32).reshape(n_heads, hd)
+
+    if state is None:
+        state = jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+
+    # pad to chunk multiple
+    pad = (-s) % chunk
+    if pad:
+        r_, k_, v_, lw = (jnp.pad(t_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                          for t_ in (r_, k_, v_, lw))
+    nC = (s + pad) // chunk
+
+    def reshape_chunks(t_):
+        return t_.reshape(b, nC, chunk, n_heads, hd).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lwc = map(reshape_chunks, (r_, k_, v_, lw))  # (nC,B,H,L,hd)
+
+    def step(S, xs):
+        rr, kk, vv, ww = xs                     # (B,H,L,hd)
+        cs = jnp.cumsum(ww, axis=2)             # inclusive logs
+        csm1 = cs - ww                          # exclusive
+        # pairwise decay P[t,j] = exp(cs_{t-1} - cs_j), j < t
+        pair = csm1[:, :, :, None, :] - cs[:, :, None, :, :]   # (B,H,L,L,hd)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        pair = jnp.where(tri[None, None, :, :, None], pair, -jnp.inf)
+        scores = jnp.einsum("bhtd,bhtjd,bhjd->bhtj", rr, jnp.exp(pair), kk)
+        o = jnp.einsum("bhtj,bhjd->bhtd", scores, vv)
+        # bonus (current token)
+        o = o + jnp.einsum("bhtd,hd,bhtd,bhte->bhte", rr, u, kk, vv)
+        # carried state
+        o = o + jnp.einsum("bhtd,bhde->bhte", rr * jnp.exp(csm1), S)
+        # state update
+        last = cs[:, :, -1:, :]                 # (B,H,1,hd)
+        S_new = S * jnp.exp(last[:, :, 0, :, None]) + jnp.einsum(
+            "bhld,bhle->bhde", kk * jnp.exp(last - cs), vv)
+        return S_new, o
+
+    # checkpoint: the (L,L,hd) pairwise-decay tensor is recomputed in bwd,
+    # never stacked across chunks
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    state, oc = jax.lax.scan(step, state, (rc, kc, vc, lwc))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(b, s + pad, n_heads, hd)[:, :s]
+
+    # per-head group norm, gate, output proj
+    o = o.reshape(b, s, n_heads, hd)
+    mean = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + eps)
+    o = o.reshape(b, s, d) * p.ln_x.astype(jnp.float32)
+    o = (o.astype(dt) * g)
+    return jnp.einsum("bsd,de->bse", o, p.wo.astype(dt)), state
+
+
+class RWKV6FFNParams(NamedTuple):
+    mu_k: jax.Array   # (D,)
+    mu_r: jax.Array   # (D,)
+    wk: jax.Array     # (D, F)
+    wv: jax.Array     # (F, D)
+    wr: jax.Array     # (D, D)
+
+
+def rwkv6_channel_mix(x: jax.Array, p: RWKV6FFNParams):
+    xprev = _token_shift(x)
+    xk = x + (xprev - x) * p.mu_k.astype(x.dtype)
+    xr = x + (xprev - x) * p.mu_r.astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p.wk.astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p.wv.astype(x.dtype))
+    return jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p.wr.astype(x.dtype))) * kv
+
+
+# ----------------------------------------------------------- single-token step
+def rwkv6_mix_step(
+    x: jax.Array,        # (B, D) current (already layer-normed)
+    x_prev: jax.Array,   # (B, D) previous normed input (token shift state)
+    state: jax.Array,    # (B, H, dk, dv) f32
+    p: RWKV6Params,
+    *,
+    n_heads: int,
+    eps: float = 1e-5,
+):
+    """One decode step.  Returns (out (B,D), new_state)."""
+    b, d = x.shape
+    hd = d // n_heads
+    dt = x.dtype
+
+    base = x + (x_prev - x) * p.tm_mu[0].astype(dt)
+    lora = jnp.tanh(jnp.einsum("bd,dk->bk", base, p.tm_lora_a.astype(dt)))
+    mixes = []
+    for i in range(5):
+        adj = jnp.einsum("bk,kd->bd", lora, p.tm_lora_b[i].astype(dt))
+        mu = p.tm_mu[i].astype(dt) + adj
+        mixes.append(x + (x_prev - x) * mu)
+    xr, xk, xv, xw, xg = mixes
+
+    r = jnp.einsum("bd,de->be", xr, p.wr.astype(dt)).astype(jnp.float32)
+    k = jnp.einsum("bd,de->be", xk, p.wk.astype(dt)).astype(jnp.float32)
+    v = jnp.einsum("bd,de->be", xv, p.wv.astype(dt)).astype(jnp.float32)
+    g = jax.nn.silu(jnp.einsum("bd,de->be", xg, p.wg.astype(dt)))
+
+    w = jnp.exp(-jnp.exp(
+        p.w0.astype(jnp.float32)
+        + jnp.einsum("bd,dk,ke->be", xw.astype(jnp.float32),
+                     p.w_lora_a.astype(jnp.float32),
+                     p.w_lora_b.astype(jnp.float32))))     # (B, D) in (0,1)
+
+    rh = r.reshape(b, n_heads, hd)
+    kh = k.reshape(b, n_heads, hd)
+    vh = v.reshape(b, n_heads, hd)
+    wh = w.reshape(b, n_heads, hd)
+    u = p.u.astype(jnp.float32).reshape(n_heads, hd)
+
+    kv = jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    o = jnp.einsum("bhk,bhkv->bhv", rh, state + u[None, :, :, None] * kv)
+    state = state * wh[..., None] + kv
+
+    mean = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + eps)
+    o = o.reshape(b, d) * p.ln_x.astype(jnp.float32)
+    o = o.astype(dt) * g
+    return jnp.einsum("bd,de->be", o, p.wo.astype(dt)), state
+
+
+def rwkv6_channel_mix_step(x: jax.Array, x_prev: jax.Array, p: RWKV6FFNParams):
+    xk = x + (x_prev - x) * p.mu_k.astype(x.dtype)
+    xr = x + (x_prev - x) * p.mu_r.astype(x.dtype)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bd,df->bf", xk, p.wk.astype(x.dtype))))
+    kv = jnp.einsum("bf,fd->bd", k, p.wv.astype(x.dtype))
+    return jax.nn.sigmoid(jnp.einsum("bd,de->be", xr, p.wr.astype(x.dtype))) * kv

@@ -1,0 +1,4 @@
+from .optimizers import adamw, adafactor, OptState, get_optimizer
+from .schedule import cosine_schedule
+
+__all__ = ["adamw", "adafactor", "OptState", "get_optimizer", "cosine_schedule"]

@@ -1,0 +1,4 @@
+from .failure import PreemptionGuard, StragglerDetector
+from .elastic import ElasticPlanner
+
+__all__ = ["PreemptionGuard", "StragglerDetector", "ElasticPlanner"]

@@ -1,0 +1,2 @@
+"""Serving runtime: prefill/decode engines with per-family caches and the
+tiered-KV telemetry hooks."""

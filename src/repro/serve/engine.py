@@ -1,0 +1,370 @@
+"""Prefill + single-token decode for every architecture family.
+
+Caches (all functional pytrees; leading L dim scanned):
+  attn/moe : {"k","v": (L,B,KVH,S,hd), "pos": (B,)}
+  rwkv6    : {"wkv": (L,B,H,hd,hd) f32, "sh_mix","sh_ffn": (L,B,D), "pos"}
+  zamba2   : {"ssm": (L,B,H,P,N) f32, "conv": (L,B,3,convC),
+              "k","v": (ninv,B,KVH,S,hd), "pos"}
+
+The decode path optionally emits per-KV-page attention-mass telemetry
+(``page_size``>0) — the serving-side HMU feed for the tiered KV cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import attention as attn_lib
+from ..models.layers import AttnParams, apply_rope, rms_norm, swiglu
+from ..models.model import ModelConfig, constrain_batch, transformer_block, \
+    rwkv6_block, zamba2_mamba_block, zamba2_shared_attention, logits_fn
+from ..models.moe import MoEParams, moe_block
+from ..models.rwkv6 import (RWKV6FFNParams, RWKV6Params, rwkv6_channel_mix_step,
+                            rwkv6_mix, rwkv6_mix_step)
+from ..models.mamba2 import Mamba2Params, mamba2_mix, mamba2_mix_step
+
+Cache = Dict[str, Any]
+
+
+# ================================================================ cache init
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Cache:
+    dtype = dtype or cfg.activ_dtype
+    L, kvh, hd, d = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    pos = jnp.zeros((batch,), jnp.int32)
+    if cfg.family in ("attn", "moe"):
+        return {
+            "k": jnp.zeros((L, batch, kvh, max_len, hd), dtype),
+            "v": jnp.zeros((L, batch, kvh, max_len, hd), dtype),
+            "pos": pos,
+        }
+    if cfg.family == "rwkv6":
+        h = d // 64
+        return {
+            "wkv": jnp.zeros((L, batch, h, 64, 64), jnp.float32),
+            "sh_mix": jnp.zeros((L, batch, d), dtype),
+            "sh_ffn": jnp.zeros((L, batch, d), dtype),
+            "pos": pos,
+        }
+    if cfg.family == "zamba2":
+        convc = cfg.d_inner + 2 * cfg.ssm_state
+        ninv = cfg.n_shared_attn
+        return {
+            "ssm": jnp.zeros((L, batch, cfg.mamba_heads,
+                              cfg.d_inner // cfg.mamba_heads, cfg.ssm_state),
+                             jnp.float32),
+            "conv": jnp.zeros((L, batch, 3, convc), dtype),
+            "k": jnp.zeros((ninv, batch, kvh, max_len, hd), dtype),
+            "v": jnp.zeros((ninv, batch, kvh, max_len, hd), dtype),
+            "pos": pos,
+        }
+    raise ValueError(cfg.family)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+# ================================================================== prefill
+def prefill(params: dict, cfg: ModelConfig, tokens=None, embeds=None,
+            positions=None, max_len: Optional[int] = None
+            ) -> Tuple[jax.Array, Cache]:
+    """Full-sequence pass that also builds the cache.
+    Returns (last-token logits (B, V), cache)."""
+    # Per-path attention schedule: the triangular unrolled schedule wins at
+    # training (-17% FLOPs) but its 64 unrolled Q-blocks interact with the
+    # seq-sharded cache stacking to emit thousands of collective-permutes at
+    # prefill (17x collective bytes, §Perf B5) — prefill uses the masked
+    # online-softmax scan instead.
+    import dataclasses as _dc
+    if cfg.causal_schedule == "triangular":
+        cfg = _dc.replace(cfg, causal_schedule="masked")
+    if embeds is not None:
+        x = embeds.astype(cfg.activ_dtype)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activ_dtype)
+    b, s, _ = x.shape
+    max_len = max_len or s
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    cache = init_cache(cfg, b, max_len)
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+
+    if cfg.family in ("attn", "moe"):
+        def body(x, bp):
+            x = constrain_batch(x, cfg)
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            from ..models.layers import attention_block
+            h, (k, v) = attention_block(
+                h, AttnParams(bp["wq"], bp["wk"], bp["wv"], bp["wo"],
+                              bp.get("bq"), bp.get("bk"), bp.get("bv")),
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, positions=positions,
+                rope_mode=cfg.rope, rope_theta=cfg.rope_theta,
+                window=cfg.window, causal_schedule=cfg.causal_schedule,
+                block_k=cfg.attn_block_k, return_kv=True)
+            x = x + h
+            h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                mp = MoEParams(bp["router"], bp["e_gate"], bp["e_up"],
+                               bp["e_down"], bp.get("s_gate"), bp.get("s_up"),
+                               bp.get("s_down"))
+                bax = None
+                if cfg.act_batch_axes:
+                    bax = (tuple(cfg.act_batch_axes)
+                           if len(cfg.act_batch_axes) > 1
+                           else cfg.act_batch_axes[0])
+                h, _ = moe_block(
+                    h, mp, top_k=cfg.moe.top_k,
+                    capacity_factor=cfg.moe.capacity_factor,
+                    groups=cfg.moe_groups or (1, 1), batch_axes=bax,
+                    expert_sharded=cfg.moe_expert_sharded)
+            else:
+                h = swiglu(h, bp["w_gate"], bp["w_up"], bp["w_down"])
+            return x + h, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        pad = max_len - s
+        cache["k"] = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))) \
+            .astype(cache["k"].dtype)
+        cache["v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))) \
+            .astype(cache["v"].dtype)
+
+    elif cfg.family == "rwkv6":
+        def body(x, bp):
+            xn = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            x2, st = rwkv6_block(x, bp, cfg)
+            xn2 = rms_norm(x2, bp["ln2"], cfg.norm_eps)
+            return x2, (st, xn[:, -1], xn2[:, -1])
+        x, (sts, shm, shf) = jax.lax.scan(body, x, params["blocks"])
+        cache["wkv"], cache["sh_mix"], cache["sh_ffn"] = sts, shm, shf
+
+    elif cfg.family == "zamba2":
+        every, ninv = cfg.zamba_attn_every, cfg.n_shared_attn
+        grouped = jax.tree.map(
+            lambda t: t.reshape((ninv, every) + t.shape[1:]), params["blocks"])
+        ssms, convs, kss, vss = [], [], [], []
+        # python loop over invocations (ninv is small) keeps shared-attn KV
+        # capture simple; mamba layers inside still scan
+        for inv in range(ninv):
+            gp = jax.tree.map(lambda t: t[inv], grouped)
+
+            def inner(x, bp):
+                xn = rms_norm(x, bp["ln1"], cfg.norm_eps)
+                x2, st = zamba2_mamba_block(x, bp, cfg)
+                # conv state: last 3 pre-conv inputs
+                dt_ = x.dtype
+                zxbcdt = jnp.einsum("bsd,de->bse", xn, bp["in_proj"].astype(dt_))
+                di, n = cfg.d_inner, cfg.ssm_state
+                xin = zxbcdt[..., di:2 * di + 2 * n]
+                conv_tail = xin[:, -3:]
+                return x2, (st, conv_tail)
+
+            x, (st_g, conv_g) = jax.lax.scan(inner, x, gp)
+            ssms.append(st_g)
+            convs.append(conv_g)
+            # shared attention with KV capture
+            sp = params["shared_attn"]
+            x, (k, v) = _zamba_shared_attn_kv(x, sp, cfg, inv, positions)
+            kss.append(k)
+            vss.append(v)
+        cache["ssm"] = jnp.concatenate(ssms, axis=0)
+        conv = jnp.concatenate(convs, axis=0)
+        cache["conv"] = conv.astype(cache["conv"].dtype)
+        pad = max_len - s
+        cache["k"] = jnp.pad(jnp.stack(kss), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))) \
+            .astype(cache["k"].dtype)
+        cache["v"] = jnp.pad(jnp.stack(vss), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))) \
+            .astype(cache["v"].dtype)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, x[:, -1:])[:, 0]
+    return logits, cache
+
+
+def _zamba_shared_attn_kv(x, sp, cfg, inv, positions):
+    h = rms_norm(x, sp["ln"], cfg.norm_eps)
+    b, s, d = h.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+
+    def lora(nm):
+        a = sp[f"lora_{nm}_a"][inv]
+        b_ = sp[f"lora_{nm}_b"][inv]
+        return jnp.einsum("bsd,dr,re->bse", h, a.astype(h.dtype), b_.astype(h.dtype))
+
+    def proj(w, delta, n):
+        y = jnp.einsum("bsd,dh->bsh", h, w.astype(h.dtype)) + delta[..., : n * hd]
+        return y.reshape(b, s, n, hd).transpose(0, 2, 1, 3)
+
+    q = proj(sp["wq"], lora("q"), nh)
+    k = proj(sp["wk"], lora("k"), nkv)
+    v = proj(sp["wv"], lora("v"), nkv)
+    q = apply_rope(q, positions[:, None], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None], cfg.rope_theta)
+    o = attn_lib.flash_train(q, k, v, causal=True, window=cfg.window,
+                             causal_schedule=cfg.causal_schedule,
+                             block_k=cfg.attn_block_k)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    x = x + jnp.einsum("bsh,hd->bsd", o, sp["wo"].astype(h.dtype))
+    hm = rms_norm(x, sp["ln_mlp"], cfg.norm_eps)
+    x = x + swiglu(hm, sp["w_gate"], sp["w_up"], sp["w_down"])
+    return x, (k, v)
+
+
+# ================================================================ decode
+def decode_step(params: dict, cfg: ModelConfig, cache: Cache,
+                tokens: jax.Array, page_size: int = 0
+                ) -> Tuple[jax.Array, Cache, Dict[str, Any]]:
+    """One token for every sequence in the batch.
+    tokens: (B,) int32. Returns (logits (B,V), cache, telemetry aux)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activ_dtype)  # (B,D)
+    pos = cache["pos"]
+    b = x.shape[0]
+    aux: Dict[str, Any] = {}
+
+    if cfg.family in ("attn", "moe"):
+        def body(carry, xs):
+            x = constrain_batch(carry, cfg)
+            bp, kc, vc = xs
+            h = rms_norm(x[:, None], bp["ln1"], cfg.norm_eps)[:, 0]
+            hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+
+            def proj(w, bias, n):
+                y = jnp.einsum("bd,dh->bh", h, w.astype(h.dtype))
+                if bias is not None:
+                    y = y + bias.astype(h.dtype)
+                return y.reshape(b, n, hd)
+
+            q = proj(bp["wq"], bp.get("bq"), nh)
+            k = proj(bp["wk"], bp.get("bk"), nkv)
+            v = proj(bp["wv"], bp.get("bv"), nkv)
+            if cfg.rope in ("rope", "mrope"):
+                # mrope degenerates to 1-D rope at decode (text position)
+                q = apply_rope(q[:, :, None, :], pos[:, None, None],
+                               cfg.rope_theta)[:, :, 0]
+                k = apply_rope(k[:, :, None, :], pos[:, None, None],
+                               cfg.rope_theta)[:, :, 0]
+            kc, vc = attn_lib.update_kv_cache(kc, vc, k, v, pos)
+            if page_size:
+                o, mass = attn_lib.decode_step(q, kc, vc, pos, window=cfg.window,
+                                               page_size=page_size)
+            else:
+                o = attn_lib.decode_step(q, kc, vc, pos, window=cfg.window)
+                mass = jnp.zeros((b, 1), jnp.float32)
+            o = o.reshape(b, nh * hd)
+            x = x + jnp.einsum("bh,hd->bd", o, bp["wo"].astype(h.dtype))
+            h2 = rms_norm(x[:, None], bp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                mp = MoEParams(bp["router"], bp["e_gate"], bp["e_up"],
+                               bp["e_down"], bp.get("s_gate"), bp.get("s_up"),
+                               bp.get("s_down"))
+                h2, moe_aux = moe_block(h2, mp, top_k=cfg.moe.top_k,
+                                        capacity_factor=4.0)
+                counts = moe_aux["counts"]
+            else:
+                h2 = swiglu(h2, bp["w_gate"], bp["w_up"], bp["w_down"])
+                counts = jnp.zeros((1,), jnp.int32)
+            x = x + h2[:, 0]
+            return x, (kc, vc, mass, counts)
+
+        x, (ks, vs, mass, counts) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+        aux["kv_page_mass"] = mass          # (L, B, npages)
+        if cfg.family == "moe":
+            aux["expert_counts"] = counts   # (L, E)
+
+    elif cfg.family == "rwkv6":
+        def body(carry, xs):
+            x = carry
+            bp, st, shm, shf = xs
+            p = RWKV6Params(bp["tm_mu"], bp["tm_lora_a"], bp["tm_lora_b"],
+                            bp["w0"], bp["w_lora_a"], bp["w_lora_b"], bp["u"],
+                            bp["wr"], bp["wk"], bp["wv"], bp["wg"], bp["wo"],
+                            bp["ln_x"])
+            xn = rms_norm(x[:, None], bp["ln1"], cfg.norm_eps)[:, 0]
+            h, st = rwkv6_mix_step(xn, shm, st, p, n_heads=cfg.d_model // 64)
+            x = x + h
+            xn2 = rms_norm(x[:, None], bp["ln2"], cfg.norm_eps)[:, 0]
+            fp = RWKV6FFNParams(bp["f_mu_k"], bp["f_mu_r"], bp["f_wk"],
+                                bp["f_wv"], bp["f_wr"])
+            x = x + rwkv6_channel_mix_step(xn2, shf, fp)
+            return x, (st, xn, xn2)
+
+        x, (sts, shm, shf) = jax.lax.scan(
+            body, x, (params["blocks"], cache["wkv"], cache["sh_mix"],
+                      cache["sh_ffn"]))
+        cache = dict(cache, wkv=sts, sh_mix=shm, sh_ffn=shf, pos=pos + 1)
+
+    elif cfg.family == "zamba2":
+        every, ninv = cfg.zamba_attn_every, cfg.n_shared_attn
+        grouped = jax.tree.map(
+            lambda t: t.reshape((ninv, every) + t.shape[1:]), params["blocks"])
+        ssm = cache["ssm"].reshape((ninv, every) + cache["ssm"].shape[1:])
+        conv = cache["conv"].reshape((ninv, every) + cache["conv"].shape[1:])
+        new_ssm, new_conv, new_k, new_v = [], [], [], []
+        for inv in range(ninv):
+            gp = jax.tree.map(lambda t: t[inv], grouped)
+
+            def inner(carry, xs):
+                x = carry
+                bp, st, cv = xs
+                p = Mamba2Params(bp["in_proj"], bp["conv_w"], bp["conv_b"],
+                                 bp["a_log"], bp["d_skip"], bp["dt_bias"],
+                                 bp["norm"], bp["out_proj"])
+                xn = rms_norm(x[:, None], bp["ln1"], cfg.norm_eps)[:, 0]
+                h, cv, st = mamba2_mix_step(
+                    xn, cv, st, p, d_inner=cfg.d_inner,
+                    n_heads=cfg.mamba_heads, d_state=cfg.ssm_state)
+                return x + h, (st, cv)
+
+            x, (st_g, cv_g) = jax.lax.scan(
+                inner, x, (gp, ssm[inv], conv[inv]))
+            new_ssm.append(st_g)
+            new_conv.append(cv_g)
+            x, k, v = _zamba_shared_attn_decode(
+                x, params["shared_attn"], cfg, inv, cache["k"][inv],
+                cache["v"][inv], pos)
+            new_k.append(k)
+            new_v.append(v)
+        cache = dict(
+            cache,
+            ssm=jnp.concatenate(new_ssm, 0), conv=jnp.concatenate(new_conv, 0),
+            k=jnp.stack(new_k), v=jnp.stack(new_v), pos=pos + 1,
+        )
+
+    x = rms_norm(x[:, None], params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, x)[:, 0]
+    return logits, cache, aux
+
+
+def _zamba_shared_attn_decode(x, sp, cfg, inv, kc, vc, pos):
+    b, d = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    h = rms_norm(x[:, None], sp["ln"], cfg.norm_eps)[:, 0]
+
+    def lora(nm):
+        a, b_ = sp[f"lora_{nm}_a"][inv], sp[f"lora_{nm}_b"][inv]
+        return jnp.einsum("bd,dr,re->be", h, a.astype(h.dtype), b_.astype(h.dtype))
+
+    def proj(w, delta, n):
+        y = jnp.einsum("bd,dh->bh", h, w.astype(h.dtype)) + delta[..., : n * hd]
+        return y.reshape(b, n, hd)
+
+    q = proj(sp["wq"], lora("q"), nh)
+    k = proj(sp["wk"], lora("k"), nkv)
+    v = proj(sp["wv"], lora("v"), nkv)
+    q = apply_rope(q[:, :, None, :], pos[:, None, None], cfg.rope_theta)[:, :, 0]
+    k = apply_rope(k[:, :, None, :], pos[:, None, None], cfg.rope_theta)[:, :, 0]
+    kc, vc = attn_lib.update_kv_cache(kc, vc, k, v, pos)
+    o = attn_lib.decode_step(q, kc, vc, pos, window=cfg.window)
+    o = o.reshape(b, nh * hd)
+    x = x + jnp.einsum("bh,hd->bd", o, sp["wo"].astype(h.dtype))
+    hm = rms_norm(x[:, None], sp["ln_mlp"], cfg.norm_eps)
+    x = x + swiglu(hm, sp["w_gate"], sp["w_up"], sp["w_down"])[:, 0]
+    return x, kc, vc

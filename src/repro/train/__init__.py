@@ -1,0 +1,1 @@
+"""Training runtime: loss/step builders, grad accumulation, compression."""

@@ -1,0 +1,73 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+Within a pod, ICI bandwidth makes full-precision gradient reduction cheap;
+*across* pods the DCN link is the bottleneck at scale.  Two standard
+compressors with **error feedback** (the residual is carried and re-added
+next step so compression bias does not accumulate — Karimireddy et al.):
+
+  * int8 stochastic-free linear quantization (per-leaf absmax scaling)
+  * top-k magnitude sparsification (per-leaf)
+
+These are grad *transforms* plugged into make_train_step(grad_transform=...)
+— in a real multi-pod launch the transform wraps the pod-boundary reduce
+(shard_map over the "pod" axis); here the math and the error-feedback state
+management are identical.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_compress_grads(grads, ef_state):
+    """Error-feedback int8 round trip (what the wire would carry is q/scale).
+    Returns (decompressed grads, new ef_state, wire_bytes_est)."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, s = quantize_int8(x)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), x - deq
+
+    out = jax.tree.map(one, grads, ef_state)
+    new_g = jax.tree.map(lambda o: o[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    wire = sum(int(x.size) for x in jax.tree.leaves(grads))  # 1 byte/elem
+    return new_g, new_e, wire
+
+
+def topk_compress_grads(grads, ef_state, k_fraction: float = 0.01):
+    """Error-feedback magnitude top-k (per leaf)."""
+    def one(g, e):
+        x = (g.astype(jnp.float32) + e).reshape(-1)
+        k = max(int(x.size * k_fraction), 1)
+        vals, idx = jax.lax.top_k(jnp.abs(x), k)
+        mask = jnp.zeros_like(x).at[idx].set(1.0)
+        kept = x * mask
+        return kept.reshape(g.shape).astype(g.dtype), (x - kept).reshape(g.shape)
+
+    out = jax.tree.map(one, grads, ef_state)
+    new_g = jax.tree.map(lambda o: o[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    wire = sum(max(int(x.size * k_fraction), 1) * 8
+               for x in jax.tree.leaves(grads))   # value+index per entry
+    return new_g, new_e, wire

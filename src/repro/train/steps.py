@@ -1,0 +1,92 @@
+"""Train-step builders: loss -> grad -> (optional accumulation/compression)
+-> optimizer update.  Pure functions of (params, opt_state, batch, step);
+sharding is applied by the caller (launch/dryrun.py, launch/train.py) via jit
+in_shardings/out_shardings built from the same schema the params come from.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import ModelConfig, forward, loss_fn
+from ..optim.optimizers import Optimizer, clip_by_global_norm
+
+
+def compute_loss(params, cfg: ModelConfig, batch: Dict[str, Any]):
+    """batch: {"tokens" (B,S)} or {"embeds" (B,S,D)}, plus "labels" (B,S),
+    optional "positions", "mask"."""
+    hidden, aux = forward(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        positions=batch.get("positions"),
+    )
+    loss = loss_fn(params, cfg, hidden, batch["labels"], batch.get("mask"))
+    if "moe_aux_loss" in aux:
+        loss = loss + 0.01 * aux["moe_aux_loss"]
+    return loss, aux
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    lr_schedule: Callable[[jax.Array], jax.Array],
+    grad_accum: int = 1,
+    max_grad_norm: float = 1.0,
+    grad_transform: Optional[Callable] = None,   # e.g. compression hook
+):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).  With grad_accum > 1 the batch's leading
+    dim is split into microbatches scanned sequentially (activation memory
+    divided by grad_accum; XLA overlaps the DP all-reduce of the final
+    gradient with the optimizer update)."""
+
+    def loss_wrapper(params, mb):
+        loss, aux = compute_loss(params, cfg, mb)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_wrapper, has_aux=True)
+
+    def single(params, batch):
+        (loss, aux), grads = grad_fn(params, batch)
+        return loss, aux, grads
+
+    def accumulated(params, batch):
+        def micro(i, _):
+            mb = jax.tree.map(
+                lambda t: t.reshape((grad_accum, t.shape[0] // grad_accum)
+                                    + t.shape[1:])[i], batch)
+            (loss, aux), grads = grad_fn(params, mb)
+            return loss, grads
+
+        def body(carry, i):
+            tot_loss, tot_grads = carry
+            loss, grads = micro(i, None)
+            tot_grads = jax.tree.map(jnp.add, tot_grads, grads)
+            return (tot_loss + loss, tot_grads), None
+
+        loss0, grads0 = micro(0, None)
+        (loss, grads), _ = jax.lax.scan(
+            body, (loss0, grads0), jnp.arange(1, grad_accum))
+        scale = 1.0 / grad_accum
+        return loss * scale, {}, jax.tree.map(lambda g: g * scale, grads)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            loss, aux, grads = accumulated(params, batch)
+        else:
+            loss, aux, grads = single(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = lr_schedule(opt_state.step + 1)   # 1-based: step 0 is warmup's first
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        if "expert_counts" in aux:
+            metrics["expert_counts"] = aux["expert_counts"]
+        return params, opt_state, metrics
+
+    return train_step

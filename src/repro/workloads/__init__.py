@@ -1,0 +1,1 @@
+"""Paper workloads: mmap-bench (§III.A) and the DLRM embedding trace (§III.B)."""

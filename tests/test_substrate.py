@@ -1,0 +1,203 @@
+"""Substrate tests: data pipeline, checkpointing, fault-tolerance runtime,
+gradient compression."""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import DataConfig, TokenPipeline
+from repro.checkpoint import CheckpointManager
+from repro.runtime import ElasticPlanner, PreemptionGuard, StragglerDetector
+from repro.runtime.failure import Heartbeat
+from repro.train import compression as comp
+from repro.optim import get_optimizer, cosine_schedule
+
+
+# ---------------------------------------------------------------------- data
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=8, seed=7)
+    p1 = TokenPipeline(cfg)
+    b5 = p1.batch(5)
+    # fresh pipeline (simulating restart) reproduces the identical batch
+    p2, step = TokenPipeline.resume(cfg, p1.state(5))
+    np.testing.assert_array_equal(p2.batch(step)["tokens"], b5["tokens"])
+    # different steps differ
+    assert not np.array_equal(p1.batch(6)["tokens"], b5["tokens"])
+
+
+def test_pipeline_rank_sharding_partitions_batch():
+    cfg = DataConfig(vocab_size=1000, seq_len=8, global_batch=8, n_ranks=4)
+    batches = [TokenPipeline(
+        DataConfig(vocab_size=1000, seq_len=8, global_batch=8,
+                   n_ranks=4, rank=r)).batch(0) for r in range(4)]
+    assert all(b["tokens"].shape == (2, 8) for b in batches)
+    # ranks see different data
+    assert not np.array_equal(batches[0]["tokens"], batches[1]["tokens"])
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=100, seq_len=12, global_batch=2)
+    b = TokenPipeline(cfg).batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_zipf_skew():
+    cfg = DataConfig(vocab_size=10_000, seq_len=512, global_batch=64,
+                     zipf_alpha=1.1)
+    toks = TokenPipeline(cfg).batch(0)["tokens"].reshape(-1)
+    counts = np.bincount(toks, minlength=10_000)
+    top = np.sort(counts)[::-1]
+    # top 1% of tokens carry > 30% of occurrences
+    assert top[:100].sum() / counts.sum() > 0.3
+
+
+# ----------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_last=2)
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": [jnp.ones((4,), jnp.int32), jnp.zeros((2, 2))]}
+    for s in (1, 2, 3):
+        mgr.save(s, tree, extra={"data_state": {"step": s}}, block=True)
+    assert mgr.latest_step() == 3
+    restored, extra = mgr.restore()
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    np.testing.assert_array_equal(restored["b"][0], tree["b"][0])
+    assert extra["data_state"]["step"] == 3
+    # retention: step 1 gone
+    with pytest.raises(Exception):
+        mgr.restore(step=1)
+
+
+def test_checkpoint_async_overlaps_and_waits(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    big = {"x": jnp.ones((512, 512))}
+    mgr.save(10, big)             # async
+    mgr.wait()
+    r, _ = mgr.restore(10)
+    assert float(r["x"].sum()) == 512 * 512
+
+
+def test_checkpoint_atomicity_no_partial_reads(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"x": jnp.ones((8,))}, block=True)
+    # a crashed tmp dir must not be visible as a checkpoint
+    (tmp_path / "step_00000002.tmp").mkdir()
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_restore_into_train_state(tmp_path):
+    """End-to-end: save params+opt state, restore, resume exactly."""
+    opt = get_optimizer("adamw")
+    params = {"w": jnp.ones((4, 4))}
+    st_ = opt.init(params)
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(5, {"params": params, "opt": st_}, block=True)
+    restored, _ = mgr.restore(5)
+    np.testing.assert_array_equal(restored["params"]["w"], params["w"])
+    assert int(restored["opt"]["step"]) == 0
+    np.testing.assert_array_equal(restored["opt"]["inner"]["m"]["w"],
+                                  np.zeros((4, 4)))
+
+
+# -------------------------------------------------------------------- runtime
+def test_preemption_guard_flag():
+    g = PreemptionGuard(install=False)
+    assert not g.preempted
+    g.trigger()
+    assert g.preempted
+
+
+def test_straggler_detector_flags_slow_steps():
+    det = StragglerDetector(threshold_sigma=3.0, patience=2, warmup_steps=5)
+    rng = np.random.default_rng(0)
+    actions = []
+    for i in range(50):
+        t = 0.10 + rng.normal(0, 0.004)
+        actions.append(det.observe(i, t))
+    assert all(a is None for a in actions[10:])      # steady state: quiet
+    # a persistent straggler escalates
+    acts = [det.observe(100 + j, 0.5) for j in range(6)]
+    assert "retry_host" in acts
+    assert "propose_exclusion" in acts
+
+
+def test_straggler_detector_ignores_single_blip():
+    det = StragglerDetector(patience=3, warmup_steps=5)
+    for i in range(30):
+        det.observe(i, 0.1)
+    a = det.observe(31, 0.9)
+    assert a in ("log", None)
+    assert det.observe(32, 0.1) is None              # recovered
+
+
+def test_heartbeat_detects_dead_hosts():
+    hb = Heartbeat(timeout_s=10)
+    hb.beat("host0", now=100.0)
+    hb.beat("host1", now=105.0)
+    assert hb.dead_hosts(now=112.0) == ["host0"]
+
+
+def test_elastic_planner_shrinks_data_axis():
+    pl = ElasticPlanner(model_axis=16, global_batch=256)
+    base = pl.plan(256, baseline_data_axis=16)
+    assert base.shape == (16, 16) and base.grad_accum_factor == 1
+    # lose 32 devices -> data axis 14 doesn't divide 256 -> falls to 8
+    p2 = pl.replan_on_failure(base, failed_devices=32)
+    assert p2.shape[1] == 16
+    assert 256 % p2.shape[0] == 0
+    assert p2.devices_used <= 224
+    assert p2.grad_accum_factor >= 2
+
+
+def test_elastic_planner_fails_fast_below_model_axis():
+    pl = ElasticPlanner(model_axis=16, global_batch=256)
+    with pytest.raises(RuntimeError):
+        pl.plan(8, baseline_data_axis=16)
+
+
+# ---------------------------------------------------------------- compression
+def test_int8_error_feedback_reduces_bias():
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.normal(size=(256,)) * 1e-3)}
+    ef = comp.init_error_feedback(g_true)
+    # accumulate the same gradient many times: with EF the mean compressed
+    # gradient converges to the true gradient
+    acc = np.zeros(256)
+    for _ in range(50):
+        g, ef, wire = comp.int8_compress_grads(g_true, ef)
+        acc += np.asarray(g["w"], np.float64)
+    np.testing.assert_allclose(acc / 50, np.asarray(g_true["w"]),
+                               rtol=0.02, atol=1e-6)
+    assert wire == 256     # 1 byte per element on the wire
+
+
+def test_topk_error_feedback_conserves_gradient_mass():
+    """EF invariant: what was sent + what is still carried == everything
+    that arrived.  No gradient signal is ever lost, only delayed."""
+    rng = np.random.default_rng(1)
+    g_true = {"w": jnp.asarray(rng.normal(size=(1000,)))}
+    ef = comp.init_error_feedback(g_true)
+    acc = np.zeros(1000)
+    n = 50
+    for _ in range(n):
+        g, ef, _ = comp.topk_compress_grads(g_true, ef, k_fraction=0.02)
+        acc += np.asarray(g["w"], np.float64)
+    total = acc + np.asarray(ef["w"], np.float64)
+    np.testing.assert_allclose(total, n * np.asarray(g_true["w"], np.float64),
+                               rtol=1e-4, atol=1e-4)
+    # and per round only ~k entries are non-zero on the wire
+    nz = np.count_nonzero(np.asarray(g["w"]))
+    assert nz <= 0.03 * 1000
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=1, max_value=6))
+def test_property_int8_quantization_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(128,)) * 10.0 ** int(rng.integers(-4, 3)))
+    q, s = comp.quantize_int8(x)
+    err = np.abs(np.asarray(comp.dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-9
