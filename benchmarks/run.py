@@ -5,6 +5,9 @@ the paper reports for that artifact).
 
   fig3_mmap        — §III.A hotness CDF + PEBS/NB/HMU accuracy & speedups
   table1_dlrm      — §III.B DLRM inference: HMU vs NB vs DRAM-only
+  epoch_runtime    — §VI online regime: all five policies over a
+                     phase-shifting trace; per-epoch JSON trajectory written
+                     to results/epoch_trajectory.json
   telemetry_sweep  — §V coverage-vs-overhead: PEBS period / NB scan sweeps
   kernel_micro     — gather_count / embedding_bag / flash_attention
                      wall-time on CPU oracle path (correctness-scale) +
@@ -68,6 +71,33 @@ def table1_dlrm():
          f"{hmu.avg_inference_us / dram.avg_inference_us:.3f}x (paper 1.03x)")
     _row("table1_hmu_footprint_fraction", hmu.avg_inference_us,
          f"{hmu.top_tier_gb / dram.top_tier_gb:.3f} (paper 0.09)")
+
+
+# ============================================================= epoch runtime
+def epoch_runtime():
+    """Online multi-epoch tiering: fused observe_all + per-epoch migration.
+    Emits the full per-epoch trajectory as JSON (the time-series artifact)."""
+    import json
+    from repro.dlrm import tracesim
+
+    t0 = time.time()
+    out = tracesim.run_online(n_epochs=10, shift_at=5)
+    us = (time.time() - t0) * 1e6
+    dest = Path("results")
+    dest.mkdir(exist_ok=True)
+    path = dest / "epoch_trajectory.json"
+    path.write_text(json.dumps(out["trajectory"], indent=1))
+    s = out["summary"]
+    for lane, row in s.items():
+        if not isinstance(row, dict):
+            continue
+        _row(f"epoch_runtime_{lane}", us,
+             f"post_shift={row['post_shift_mean_time_us']:.0f}us "
+             f"final_acc={row['final_accuracy']:.2f} "
+             f"recovery={row['post_shift_recovery_epochs']}ep")
+    _row("epoch_runtime_proactive_vs_nb", us,
+         f"{s['proactive_vs_nb_post_shift']:.2f}x post-shift "
+         f"(trajectory -> {path})")
 
 
 # =========================================================== telemetry sweep
@@ -168,6 +198,7 @@ def roofline_summary():
 ALL = {
     "fig3_mmap": fig3_mmap,
     "table1_dlrm": table1_dlrm,
+    "epoch_runtime": epoch_runtime,
     "telemetry_sweep": telemetry_sweep,
     "kernel_micro": kernel_micro,
     "roofline_summary": roofline_summary,

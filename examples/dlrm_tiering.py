@@ -86,3 +86,34 @@ print(f"modeled lookup time/eval: tiered={t_tier*1e6:.0f}us "
       f"dram-only={t_fast*1e6:.0f}us cxl-only={t_slow*1e6:.0f}us")
 print(f"=> tiered within {t_tier/t_fast:.2f}x of DRAM-only at "
       f"{FAST_FRACTION:.0%} footprint (paper: 1.03x at 9%)")
+
+# ---- online multi-epoch runtime (paper §VI): the hot set rotates mid-run.
+# One fused jit dispatch observes each epoch; every policy lane migrates per
+# epoch; proactive/EWMA re-converges after the shift while NB's cumulative
+# two-touch signal keeps serving the stale hot set.
+from repro.core.runtime import EpochRuntime                     # noqa: E402
+from repro.dlrm.datagen import phase_shift_epochs               # noqa: E402
+
+N_EPOCHS, BATCHES_PER_EPOCH, SHIFT_AT = 8, 4, 4
+LANES = ("hmu_oracle", "proactive_ewma", "nb_two_touch")
+rt = EpochRuntime(
+    N_BLOCKS, k_hot=store.n_slots, policies=LANES, system=CXL_SYSTEM,
+    bytes_per_access=DIM * 4, block_bytes=BLOCK_ROWS * DIM * 4,
+    nb_scan_rate=N_BLOCKS // BATCHES_PER_EPOCH,
+)
+print(f"\nonline epoch runtime: {N_EPOCHS} epochs, hot-set rotation at "
+      f"epoch {SHIFT_AT}")
+print("epoch | " + " | ".join(f"{n:>20s}" for n in LANES) + "   (time us / acc)")
+for e, epoch in enumerate(phase_shift_epochs(
+        spec, n_epochs=N_EPOCHS, batches_per_epoch=BATCHES_PER_EPOCH,
+        shift_at=SHIFT_AT, seed=2)):
+    recs = rt.step(epoch)
+    mark = "<- shift" if e == SHIFT_AT else ""
+    print(f"  {e:3d} | " + " | ".join(
+        f"{recs[n].time_s*1e6:12.0f} /{recs[n].accuracy:5.2f}"
+        for n in LANES) + f"   {mark}")
+traj = rt.trajectory()
+pro, nb = traj.times("proactive_ewma"), traj.times("nb_two_touch")
+print(f"=> post-shift: proactive/EWMA {np.mean(nb[SHIFT_AT:]/pro[SHIFT_AT:]):.1f}x "
+      f"faster than Linux-NB in every epoch "
+      f"({'yes' if (pro[SHIFT_AT:] < nb[SHIFT_AT:]).all() else 'NO'})")

@@ -58,3 +58,56 @@ print(f"modeled expert-weight fetch: tiered={t_tier*1e6:.0f}us "
       f"all-HBM={t_hbm*1e6:.0f}us all-host={t_host*1e6:.0f}us")
 print(f"=> {t_host/t_tier:.1f}x faster than full offload, "
       f"{bytes_per_expert*(e-k_fast)/1e6:.0f} MB of HBM freed per layer")
+
+# ---- online epoch runtime: routing mix shifts mid-run (new traffic pattern
+# routes to different experts).  The router's per-epoch counters feed the
+# EpochRuntime; proactive/EWMA re-promotes the new hot experts within an
+# epoch while NB-style recency tracking lags.
+from repro.core.runtime import EpochRuntime                     # noqa: E402
+
+N_EPOCHS, BATCHES_PER_EPOCH, SHIFT_AT = 6, 4, 3
+LANES = ("proactive_ewma", "nb_two_touch")
+rt = EpochRuntime(
+    e, k_hot=k_fast, policies=LANES, system=TPU_V5E_SYSTEM,
+    bytes_per_access=bytes_per_expert,
+    block_bytes=bytes_per_expert * cfg.n_layers,
+    nb_scan_rate=max(e // 2, 1),
+    ewma_alpha=0.9,     # few experts -> little history needed; adapt fast
+)
+
+
+def expert_stream(shift: bool) -> np.ndarray:
+    """One batch's expert-access stream from the router (layer-summed)."""
+    zipf = np.minimum(rng.zipf(1.3, size=(4, 64)) - 1, cfg.vocab_size - 1)
+    if shift:   # rotate token popularity -> different experts become hot
+        zipf = (zipf + cfg.vocab_size // 2) % cfg.vocab_size
+    c = np.asarray(fwd(params, jnp.asarray(zipf, jnp.int32))).sum(0)
+    return np.repeat(np.arange(e), c)       # constant length: tokens*top_k*L
+
+
+print(f"\nonline expert tiering: {N_EPOCHS} epochs, routing shift at "
+      f"epoch {SHIFT_AT} (modeled fetch us / placement accuracy)")
+for ep in range(N_EPOCHS):
+    epoch = np.stack([expert_stream(ep >= SHIFT_AT)
+                      for _ in range(BATCHES_PER_EPOCH)])
+    recs = rt.step(epoch)
+    mark = "<- shift" if ep == SHIFT_AT else ""
+    print(f"  epoch {ep}: " + "  ".join(
+        f"{n}={recs[n].time_s*1e6:7.0f}us/acc={recs[n].accuracy:.2f}"
+        for n in LANES) + f"  {mark}")
+traj = rt.trajectory()
+pro, nb = traj.times("proactive_ewma"), traj.times("nb_two_touch")
+
+
+def recovery(lane):
+    acc = [r.accuracy for r in traj.lane(lane)][SHIFT_AT:]
+    hits = [i for i, a in enumerate(acc) if a >= 0.5]
+    return hits[0] if hits else None
+
+
+print(f"=> post-shift mean fetch: proactive={float(pro[SHIFT_AT:].mean())*1e6:.0f}us "
+      f"nb={float(nb[SHIFT_AT:].mean())*1e6:.0f}us; recovery to >=50% placement "
+      f"accuracy: proactive={recovery('proactive_ewma')} epochs "
+      f"nb={recovery('nb_two_touch')} epochs "
+      f"(at {e} experts both signals are cheap — the gap widens with scale; "
+      f"see dlrm_tiering.py at 16k pages)")

@@ -6,15 +6,19 @@ Public surface:
   policies              oracle top-k, NB two-touch, reactive, proactive, hinted
   MemSystem             two-tier analytic cost model (costmodel.py)
   TieringManager        Fig.2 "Tiering Agent" glue (manager.py)
+  EpochRuntime          online observe->decide->migrate->account loop running
+                        all five policies over multi-epoch streams (runtime.py)
   metrics               accuracy / coverage / overlap / hotness CDF
 """
 from .blockstore import TieredStore
 from .costmodel import CXL_SYSTEM, TPU_V5E_SYSTEM, MemSystem, TierSpec
 from .manager import StrategyResult, TieringManager
+from .runtime import ALL_POLICIES, EpochRecord, EpochRuntime, Trajectory
 from . import metrics, policy, telemetry
 
 __all__ = [
     "TieredStore", "TieringManager", "StrategyResult",
+    "EpochRuntime", "EpochRecord", "Trajectory", "ALL_POLICIES",
     "MemSystem", "TierSpec", "CXL_SYSTEM", "TPU_V5E_SYSTEM",
     "metrics", "policy", "telemetry",
 ]

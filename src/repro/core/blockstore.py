@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -112,6 +112,15 @@ class TieredStore:
     def demote(self, block_ids: jax.Array) -> "TieredStore":
         """Write fast copies back to the slow region and free the slots."""
         return _demote(self, block_ids)
+
+    def migrate(self, promote_ids: jax.Array,
+                demote_ids: Optional[jax.Array] = None) -> "TieredStore":
+        """One epoch's migration: explicit demotions (e.g. the policy layer's
+        ``coldest_victims``) first so promotions land in the freed slots
+        instead of evicting demote-on-overwrite's arbitrary lowest-index
+        occupants."""
+        st = self if demote_ids is None else self.demote(demote_ids)
+        return st.promote(promote_ids)
 
     # ---------------------------------------------------------------- updates
     def scatter_update(self, rows: jax.Array, values: jax.Array) -> "TieredStore":

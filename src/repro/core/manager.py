@@ -11,11 +11,22 @@ The evaluation flow matches the paper's methodology exactly:
      top-K (K = fast-tier capacity) are migrated.
   3. *Measurement phase*: the stream is replayed against the placement; the
      cost model converts the per-tier access mix into time.
+
+All collector state (HMU + PEBS + NB + the ground-truth histogram) lives in
+one :class:`~repro.core.telemetry.TelemetryBundle` pytree.  Two observe paths
+feed it:
+
+* ``observe(batch)``   — reference path: one jit dispatch per collector per
+  batch (plus one for the true counter), exactly the per-batch semantics.
+* ``observe_epoch(batches)`` — fused path: a single jit dispatch that
+  ``lax.scan``s the whole epoch on device; bit-identical to calling
+  ``observe`` on each row in order, and what the epoch-driven runtime
+  (:mod:`repro.core.runtime`) uses.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterable, Optional
+from typing import Dict, Iterable, Optional
 
 import numpy as np
 import jax.numpy as jnp
@@ -54,19 +65,61 @@ class TieringManager:
         # Linux default scan window covers the whole VMA over ~scan_period;
         # default: one full pass every ~16 observe calls.
         scan = nb_scan_rate if nb_scan_rate is not None else max(n_blocks // 16, 1)
-        self.hmu = tel.hmu_init(n_blocks, log_capacity=hmu_log_capacity)
-        self.pebs = tel.pebs_init(n_blocks, period=pebs_period)
-        self.nb = tel.nb_init(n_blocks, scan_rate=scan)
-        self.true_counts = np.zeros((n_blocks,), np.int64)
+        self.bundle = tel.bundle_init(
+            n_blocks, pebs_period=pebs_period, nb_scan_rate=scan,
+            hmu_log_capacity=hmu_log_capacity,
+        )
+
+    # ------------------------------------------------- collector accessors
+    # (kept as attributes for the pre-bundle callers: tracesim/benchmarks
+    # read ``mgr.hmu`` and assign ``mgr.hmu = tel.hmu_drain_cost(mgr.hmu)``)
+    @property
+    def hmu(self) -> tel.HMUState:
+        return self.bundle.hmu
+
+    @hmu.setter
+    def hmu(self, state: tel.HMUState) -> None:
+        self.bundle = dataclasses.replace(self.bundle, hmu=state)
+
+    @property
+    def pebs(self) -> tel.PEBSState:
+        return self.bundle.pebs
+
+    @pebs.setter
+    def pebs(self, state: tel.PEBSState) -> None:
+        self.bundle = dataclasses.replace(self.bundle, pebs=state)
+
+    @property
+    def nb(self) -> tel.NBState:
+        return self.bundle.nb
+
+    @nb.setter
+    def nb(self, state: tel.NBState) -> None:
+        self.bundle = dataclasses.replace(self.bundle, nb=state)
+
+    @property
+    def true_counts(self) -> np.ndarray:
+        """Exact access histogram (host copy, int64 for downstream sums)."""
+        return np.asarray(self.bundle.true_counts, np.int64)
 
     # ---------------------------------------------------------------- observe
     def observe(self, block_ids) -> None:
-        """Feed one batch of the ground-truth access stream to all collectors."""
+        """Feed one batch of the ground-truth access stream to all collectors
+        (reference per-batch path: one dispatch per collector)."""
         arr = jnp.asarray(block_ids)
-        self.hmu = tel.hmu_observe(self.hmu, arr)
-        self.pebs = tel.pebs_observe(self.pebs, arr)
-        self.nb = tel.nb_observe(self.nb, arr)
-        np.add.at(self.true_counts, np.asarray(arr).reshape(-1), 1)
+        self.bundle = tel.TelemetryBundle(
+            hmu=tel.hmu_observe(self.bundle.hmu, arr),
+            pebs=tel.pebs_observe(self.bundle.pebs, arr),
+            nb=tel.nb_observe(self.bundle.nb, arr),
+            true_counts=tel.count_observe(self.bundle.true_counts, arr),
+        )
+
+    def observe_epoch(self, batches) -> None:
+        """Fused path: observe ``(n_batches, batch_size)`` in ONE dispatch."""
+        arr = jnp.asarray(batches)
+        if arr.ndim != 2:
+            raise ValueError(f"observe_epoch wants (n_batches, batch), got {arr.shape}")
+        self.bundle = tel.observe_all(self.bundle, arr)
 
     def observe_stream(self, stream: Iterable) -> None:
         for batch in stream:
@@ -95,8 +148,9 @@ class TieringManager:
         ``eval_counts`` defaults to the profiled counts (the paper replays the
         same workload).  ``compute_base_s`` is the non-memory compute time.
         """
-        true = eval_counts if eval_counts is not None else self.true_counts
-        true_hot = metrics.true_top_k(self.true_counts, self.k_hot)
+        true_counts = self.true_counts
+        true = eval_counts if eval_counts is not None else true_counts
+        true_hot = metrics.true_top_k(true_counts, self.k_hot)
         plans = self.decide(nb_rate_limit=nb_rate_limit)
         ests = {
             "hmu": np.asarray(tel.hmu_estimate(self.hmu)),
@@ -136,7 +190,7 @@ class TieringManager:
             out[name] = StrategyResult(
                 name=name,
                 promoted=np.nonzero(mask)[0],
-                est_counts=self.true_counts,
+                est_counts=true_counts,
                 accuracy=1.0 if mask.any() else 0.0,
                 coverage=1.0 if mask.any() else 0.0,
                 host_events=0,

@@ -90,3 +90,17 @@ def coldest_victims(est_counts: jax.Array, slot_to_block: jax.Array, n: int) -> 
     order = jnp.argsort(heat)
     sel = order[: min(n, order.shape[0])]
     return jnp.where(occ[sel], slot_to_block[sel], -1)
+
+
+def plan_eviction(est_counts: jax.Array, want: jax.Array,
+                  slot_to_block: jax.Array, n: int) -> jax.Array:
+    """Victims to free ``n`` slots for a promotion plan: the coldest resident
+    blocks by ``est_counts``, with blocks in ``want`` (the plan's ids, -1
+    padding allowed) guarded by +inf heat so a still-wanted resident is never
+    evicted ahead of empty slots.  Shared by EpochRuntime and
+    TieredEmbedding so the eviction invariant lives in one place."""
+    est = est_counts.astype(jnp.float32)
+    if want.shape[0]:
+        safe = jnp.maximum(want, 0)
+        est = est.at[safe].set(jnp.where(want >= 0, jnp.inf, est[safe]))
+    return coldest_victims(est, slot_to_block, n)

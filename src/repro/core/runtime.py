@@ -1,0 +1,364 @@
+"""Epoch-driven tiering runtime — observe -> decide -> migrate -> account.
+
+The paper's headline numbers come from a one-shot profile->promote->replay
+methodology; its §VI vision (reactive placement, proactive movement, compiler
+hints from a programmable HMU) is inherently *online*.  This module is that
+online regime: a loop over epochs in which
+
+  1. **observe**  — the whole epoch's access stream is fed to all three
+     collectors (HMU / PEBS / NB) and the ground-truth counter in ONE jit
+     dispatch (``telemetry.observe_all``'s ``lax.scan``),
+  2. **decide**   — every policy lane (five of them, one per §VI strategy)
+     turns its collector's *epoch-local* estimate into a migration plan,
+  3. **migrate**  — promotions are applied against a bounded fast tier;
+     when slots run out the lane demotes ``policy.coldest_victims`` first,
+  4. **account**  — the epoch is charged: modeled access time under the
+     placement that actually *served* it (decided from data up to the
+     previous epoch — no time travel), plus the collector's host tax and the
+     epoch's migration traffic; accuracy/coverage are scored against the
+     epoch's own true top-K.
+
+Per-epoch records form a trajectory (a time series, not a single end-state
+number) — the NeoMem / HybridTier evaluation regime, and what exposes the
+phase-shift behaviour: proactive/EWMA re-ranks within one epoch of a hot-set
+rotation while NB's cumulative two-touch signal keeps serving the stale set.
+
+Policy lanes and their telemetry sources:
+
+=================  =========================  ===============================
+lane               estimate                   host tax per epoch
+=================  =========================  ===============================
+hmu_oracle         HMU epoch-delta counts     log drain (~ns/record)
+nb_two_touch       NB cumulative faults       hint faults (~2 us each)
+reactive_watermark HMU epoch-delta counts     log drain
+proactive_ewma     EWMA of HMU epoch deltas   log drain
+hinted             PEBS epoch-delta estimate  PEBS samples (~1.5 us each)
+                   blended with static hints
+=================  =========================  ===============================
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import metrics, policy
+from . import telemetry as tel
+from .costmodel import CXL_SYSTEM, MemSystem, split_accesses_by_tier
+
+__all__ = [
+    "ALL_POLICIES", "EpochRecord", "EpochRuntime", "Trajectory",
+]
+
+ALL_POLICIES = (
+    "hmu_oracle", "nb_two_touch", "reactive_watermark", "proactive_ewma",
+    "hinted",
+)
+
+# Host-side cost per telemetry event (see dlrm.tracesim for the NB/PEBS
+# calibration; HMU pays only bulk log processing — the paper's 'process the
+# trace immediately', which NMC would shrink further).
+NB_FAULT_COST_S = 2e-6
+PEBS_SAMPLE_COST_S = 1.5e-6
+HMU_DRAIN_COST_S = 2e-9
+
+
+@dataclasses.dataclass
+class EpochRecord:
+    """One lane's accounting for one epoch."""
+    epoch: int
+    lane: str
+    time_s: float            # access + host tax + migration
+    access_s: float
+    host_tax_s: float
+    migration_s: float
+    accuracy: float          # placement that served the epoch vs epoch top-K
+    coverage: float
+    resident: int            # fast blocks during the epoch
+    promoted: int            # migrations applied at epoch end
+    demoted: int
+    host_events: float       # telemetry events charged this epoch
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Trajectory:
+    """Per-epoch time series for every lane (the runtime's output)."""
+    n_blocks: int
+    k_hot: int
+    records: Dict[str, List[EpochRecord]]
+
+    def lane(self, name: str) -> List[EpochRecord]:
+        return self.records[name]
+
+    def times(self, name: str) -> np.ndarray:
+        return np.array([r.time_s for r in self.records[name]])
+
+    def to_json(self, **meta) -> str:
+        return json.dumps({
+            "n_blocks": self.n_blocks,
+            "k_hot": self.k_hot,
+            **meta,
+            "lanes": {name: [r.to_dict() for r in recs]
+                      for name, recs in self.records.items()},
+        }, indent=1)
+
+
+@dataclasses.dataclass
+class _Lane:
+    """Per-policy placement state: a bounded fast tier's indirection maps
+    (same invariants as TieredStore's, without carrying the payload rows)."""
+    name: str
+    slot_to_block: np.ndarray            # (k,) int32, -1 = free
+    block_to_slot: np.ndarray            # (n_blocks,) int32, -1 = slow-only
+    pred: Optional[np.ndarray] = None    # EWMA state (proactive lane)
+
+    @property
+    def fast_mask(self) -> np.ndarray:
+        return self.block_to_slot >= 0
+
+    def resident_ids(self) -> np.ndarray:
+        s = self.slot_to_block
+        return s[s >= 0]
+
+
+def _unique_in_order(ids: np.ndarray, k: int) -> np.ndarray:
+    """Valid plan ids, de-duplicated preserving priority order, capped at k."""
+    ids = np.asarray(ids).reshape(-1)
+    ids = ids[ids >= 0]
+    _, first = np.unique(ids, return_index=True)
+    return ids[np.sort(first)][:k]
+
+
+class EpochRuntime:
+    """Runs all policy lanes over one shared telemetry stream, epoch by epoch.
+
+    One collector set observes the stream once per epoch (fused); each lane
+    owns only its placement.  ``step`` consumes one epoch of equal-size
+    batches ``(n_batches, batch_size)`` and returns that epoch's records;
+    ``run`` drives a whole workload and returns the :class:`Trajectory`.
+    """
+
+    def __init__(
+        self,
+        n_blocks: int,
+        k_hot: int,
+        policies: Sequence[str] = ALL_POLICIES,
+        system: MemSystem = CXL_SYSTEM,
+        bytes_per_access: float = 256.0,
+        block_bytes: float = 4096.0,
+        pebs_period: int = 10007,
+        nb_scan_rate: Optional[int] = None,
+        hmu_log_capacity: int = 1 << 33,
+        ewma_alpha: float = 0.5,
+        hint_rank: Optional[np.ndarray] = None,
+        hint_weight: float = 0.25,
+        reactive_hot_threshold: Optional[int] = None,
+        nb_rate_limit: Optional[int] = None,
+    ):
+        unknown = set(policies) - set(ALL_POLICIES)
+        if unknown:
+            raise ValueError(f"unknown policies {sorted(unknown)}; "
+                             f"choose from {ALL_POLICIES}")
+        self.n_blocks = int(n_blocks)
+        self.k_hot = min(int(k_hot), self.n_blocks)
+        self.system = system
+        self.bytes_per_access = float(bytes_per_access)
+        self.block_bytes = float(block_bytes)
+        self.ewma_alpha = float(ewma_alpha)
+        self.hint_rank = (np.zeros((n_blocks,), np.float32)
+                          if hint_rank is None
+                          else np.asarray(hint_rank, np.float32))
+        self.hint_weight = float(hint_weight)
+        self.reactive_hot_threshold = reactive_hot_threshold
+        self.nb_rate_limit = nb_rate_limit
+        scan = nb_scan_rate if nb_scan_rate is not None else max(n_blocks // 16, 1)
+        self.bundle = tel.bundle_init(
+            n_blocks, pebs_period=pebs_period, nb_scan_rate=scan,
+            hmu_log_capacity=hmu_log_capacity,
+        )
+        self.lanes = {
+            name: _Lane(
+                name=name,
+                slot_to_block=np.full((self.k_hot,), -1, np.int32),
+                block_to_slot=np.full((self.n_blocks,), -1, np.int32),
+                pred=(np.zeros((self.n_blocks,), np.float32)
+                      if name == "proactive_ewma" else None),
+            )
+            for name in policies
+        }
+        self.epoch = 0
+        self.records: Dict[str, List[EpochRecord]] = {n: [] for n in self.lanes}
+        # epoch-delta baselines
+        self._prev_true = np.zeros((n_blocks,), np.int64)
+        self._prev_hmu = np.zeros((n_blocks,), np.int64)
+        self._prev_pebs = np.zeros((n_blocks,), np.int64)
+        self._prev_pebs_host = 0.0
+        self._prev_nb_host = 0.0
+
+    # ------------------------------------------------------------- migrate
+    def _apply_plan(self, lane: _Lane, plan: policy.MigrationPlan,
+                    est: np.ndarray) -> Tuple[int, int]:
+        """Promote the plan into the lane's bounded fast tier; evict
+        ``coldest_victims`` when no slots are free.  Returns (promoted,
+        demoted) block counts — each is one block copy of migration traffic."""
+        want = _unique_in_order(np.asarray(plan.promote), self.k_hot)
+        if want.size == 0:
+            return 0, 0
+        new = want[lane.block_to_slot[want] < 0]
+        if new.size == 0:
+            return 0, 0
+        free = np.nonzero(lane.slot_to_block < 0)[0]
+        demoted = 0
+        need = new.size - free.size
+        if need > 0:
+            vic = np.asarray(policy.plan_eviction(
+                jnp.asarray(est, jnp.float32), jnp.asarray(want),
+                jnp.asarray(lane.slot_to_block), int(need)))
+            vic = vic[vic >= 0]
+            if vic.size:
+                slots = lane.block_to_slot[vic]
+                lane.slot_to_block[slots] = -1
+                lane.block_to_slot[vic] = -1
+                demoted = int(vic.size)
+            free = np.nonzero(lane.slot_to_block < 0)[0]
+        take = int(min(new.size, free.size))
+        if take:
+            sel, slots = new[:take], free[:take]
+            lane.slot_to_block[slots] = sel
+            lane.block_to_slot[sel] = slots
+        return take, demoted
+
+    def _demote_untouched(self, lane: _Lane, est: np.ndarray) -> int:
+        """Watermark demotion: free every resident block the epoch never
+        touched (est == 0) so reactive promotion has slots."""
+        resident = lane.resident_ids()
+        idle = resident[est[resident] == 0]
+        if idle.size:
+            slots = lane.block_to_slot[idle]
+            lane.slot_to_block[slots] = -1
+            lane.block_to_slot[idle] = -1
+        return int(idle.size)
+
+    # -------------------------------------------------------------- decide
+    def _plan(self, lane: _Lane, d_hmu: np.ndarray, d_pebs: np.ndarray,
+              nb_faults: np.ndarray, epoch_accesses: int,
+              ) -> Tuple[policy.MigrationPlan, np.ndarray, int]:
+        """One lane's decide step -> (plan, estimate, pre-demotions)."""
+        k = self.k_hot
+        pre_demoted = 0
+        if lane.name == "hmu_oracle":
+            est = d_hmu
+            plan = policy.oracle_top_k(jnp.asarray(est, jnp.int32), k)
+        elif lane.name == "nb_two_touch":
+            est = nb_faults
+            plan = policy.nb_two_touch(jnp.asarray(est, jnp.int32), k,
+                                       self.nb_rate_limit)
+        elif lane.name == "reactive_watermark":
+            est = d_hmu
+            pre_demoted = self._demote_untouched(lane, est)
+            free = int(np.sum(lane.slot_to_block < 0))
+            thr = (self.reactive_hot_threshold
+                   if self.reactive_hot_threshold is not None
+                   else max(2, epoch_accesses // (8 * max(k, 1))))
+            plan = policy.reactive_watermark(
+                jnp.asarray(est, jnp.int32), int(thr),
+                jnp.asarray(free), max_moves=k)
+        elif lane.name == "proactive_ewma":
+            pred, plan = policy.proactive_ewma(
+                jnp.asarray(lane.pred), jnp.asarray(d_hmu, jnp.float32), k,
+                alpha=self.ewma_alpha)
+            lane.pred = np.asarray(pred)
+            est = lane.pred
+        elif lane.name == "hinted":
+            est = d_pebs
+            plan = policy.hinted(jnp.asarray(est, jnp.int32),
+                                 jnp.asarray(self.hint_rank), k,
+                                 hint_weight=self.hint_weight)
+        else:  # pragma: no cover - guarded in __init__
+            raise ValueError(lane.name)
+        return plan, np.asarray(est), pre_demoted
+
+    # ---------------------------------------------------------------- step
+    def step(self, batches) -> Dict[str, EpochRecord]:
+        """Consume one epoch ``(n_batches, batch_size)``: fused observe, then
+        decide/migrate/account every lane.  Returns this epoch's records."""
+        batches = np.ascontiguousarray(np.asarray(batches, np.int32))
+        if batches.ndim != 2:
+            raise ValueError(f"epoch batches must be 2-D, got {batches.shape}")
+        epoch_accesses = int(batches.size)
+
+        # -- observe (one dispatch) + drain the HMU log
+        self.bundle = tel.observe_all(self.bundle, jnp.asarray(batches))
+        drained = float(self.bundle.hmu.log_used)
+        self.bundle = dataclasses.replace(
+            self.bundle, hmu=tel.hmu_drain_cost(self.bundle.hmu))
+
+        # -- epoch-local estimates
+        true_now = np.asarray(self.bundle.true_counts, np.int64)
+        hmu_now = np.asarray(tel.hmu_estimate(self.bundle.hmu), np.int64)
+        pebs_now = np.asarray(tel.pebs_estimate(self.bundle.pebs), np.int64)
+        d_true = true_now - self._prev_true
+        d_hmu = hmu_now - self._prev_hmu
+        d_pebs = pebs_now - self._prev_pebs
+        nb_faults = np.asarray(tel.nb_estimate(self.bundle.nb), np.int64)
+        pebs_host = float(self.bundle.pebs.host_events)
+        nb_host = float(self.bundle.nb.host_events)
+        d_pebs_host = pebs_host - self._prev_pebs_host
+        d_nb_host = nb_host - self._prev_nb_host
+        self._prev_true, self._prev_hmu, self._prev_pebs = true_now, hmu_now, pebs_now
+        self._prev_pebs_host, self._prev_nb_host = pebs_host, nb_host
+
+        epoch_hot = metrics.true_top_k(d_true, self.k_hot)
+        out: Dict[str, EpochRecord] = {}
+        for lane in self.lanes.values():
+            # -- account the epoch under the placement that served it
+            served = lane.resident_ids().copy()
+            n_fast, n_slow = split_accesses_by_tier(d_true, lane.fast_mask)
+            access_s = self.system.access_time_s(
+                n_fast, n_slow, self.bytes_per_access)
+            if lane.name == "nb_two_touch":
+                host_events, per_event = d_nb_host, NB_FAULT_COST_S
+            elif lane.name == "hinted":
+                host_events, per_event = d_pebs_host, PEBS_SAMPLE_COST_S
+            else:
+                host_events, per_event = drained, HMU_DRAIN_COST_S
+            host_tax_s = host_events * per_event
+
+            # -- decide + migrate for the NEXT epoch
+            plan, est, pre_demoted = self._plan(
+                lane, d_hmu, d_pebs, nb_faults, epoch_accesses)
+            promoted, demoted = self._apply_plan(lane, plan, est)
+            demoted += pre_demoted
+            migration_s = self.system.migration_time_s(
+                promoted + demoted, self.block_bytes)
+
+            rec = EpochRecord(
+                epoch=self.epoch, lane=lane.name,
+                time_s=access_s + host_tax_s + migration_s,
+                access_s=access_s, host_tax_s=host_tax_s,
+                migration_s=migration_s,
+                accuracy=metrics.accuracy(served, epoch_hot),
+                coverage=metrics.coverage(served, epoch_hot, self.k_hot),
+                resident=int(served.size), promoted=promoted, demoted=demoted,
+                host_events=host_events,
+            )
+            self.records[lane.name].append(rec)
+            out[lane.name] = rec
+        self.epoch += 1
+        return out
+
+    # ----------------------------------------------------------------- run
+    def run(self, epochs: Iterable) -> Trajectory:
+        for batches in epochs:
+            self.step(batches)
+        return self.trajectory()
+
+    def trajectory(self) -> Trajectory:
+        return Trajectory(n_blocks=self.n_blocks, k_hot=self.k_hot,
+                          records=self.records)

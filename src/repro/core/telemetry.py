@@ -29,10 +29,11 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
-    "HMUState", "PEBSState", "NBState",
+    "HMUState", "PEBSState", "NBState", "TelemetryBundle",
     "hmu_init", "hmu_observe", "hmu_estimate", "hmu_drain_cost",
     "pebs_init", "pebs_observe", "pebs_estimate",
     "nb_init", "nb_observe", "nb_estimate",
+    "bundle_init", "observe_all", "count_observe",
 ]
 
 
@@ -68,9 +69,10 @@ def hmu_init(n_blocks: int, log_capacity: int = 1 << 33) -> HMUState:
     )
 
 
-@partial(jax.jit, donate_argnums=0, static_argnums=2)
-def hmu_observe(state: HMUState, block_ids: jax.Array, weight: int = 1) -> HMUState:
-    """Device-side: every access counted. No host involvement."""
+def _hmu_observe(state: HMUState, block_ids: jax.Array, weight: int = 1) -> HMUState:
+    """Pure (un-jitted) HMU update — shared by the per-batch jit and the
+    fused epoch scan so both paths are the *same traced computation* and
+    therefore bit-identical."""
     flat = block_ids.reshape(-1)
     counts = state.counts.at[flat].add(weight, mode="drop")
     n = jnp.asarray(flat.shape[0] * weight, jnp.float32)
@@ -82,6 +84,12 @@ def hmu_observe(state: HMUState, block_ids: jax.Array, weight: int = 1) -> HMUSt
         log_used=state.log_used + appended,
         log_dropped=state.log_dropped + (n - appended),
     )
+
+
+@partial(jax.jit, donate_argnums=0, static_argnums=2)
+def hmu_observe(state: HMUState, block_ids: jax.Array, weight: int = 1) -> HMUState:
+    """Device-side: every access counted. No host involvement."""
+    return _hmu_observe(state, block_ids, weight)
 
 
 def hmu_estimate(state: HMUState) -> jax.Array:
@@ -117,13 +125,7 @@ def pebs_init(n_blocks: int, period: int = 10007) -> PEBSState:
     )
 
 
-@partial(jax.jit, donate_argnums=0)
-def pebs_observe(state: PEBSState, block_ids: jax.Array) -> PEBSState:
-    """CPU-assisted: only every ``period``-th access in program order is seen.
-
-    The access stream order is the order of ``block_ids`` — identical to what
-    the HMU sees, so coverage differences are purely due to sampling.
-    """
+def _pebs_observe(state: PEBSState, block_ids: jax.Array) -> PEBSState:
     flat = block_ids.reshape(-1)
     n = flat.shape[0]
     # cursor is float32 for range; exact for streams < 2^24 per phase window.
@@ -138,6 +140,16 @@ def pebs_observe(state: PEBSState, block_ids: jax.Array) -> PEBSState:
         cursor=state.cursor + n,
         host_events=state.host_events + jnp.sum(hit).astype(jnp.float32),
     )
+
+
+@partial(jax.jit, donate_argnums=0)
+def pebs_observe(state: PEBSState, block_ids: jax.Array) -> PEBSState:
+    """CPU-assisted: only every ``period``-th access in program order is seen.
+
+    The access stream order is the order of ``block_ids`` — identical to what
+    the HMU sees, so coverage differences are purely due to sampling.
+    """
+    return _pebs_observe(state, block_ids)
 
 
 def pebs_estimate(state: PEBSState) -> jax.Array:
@@ -175,8 +187,7 @@ def nb_init(n_blocks: int, scan_rate: int) -> NBState:
     )
 
 
-@partial(jax.jit, donate_argnums=0)
-def nb_observe(state: NBState, block_ids: jax.Array) -> NBState:
+def _nb_observe(state: NBState, block_ids: jax.Array) -> NBState:
     n_blocks = state.mapped.shape[0]
     # 1. scanner tick: unmap the next scan_rate blocks (cyclic)
     scan_idx = (state.scan_ptr + jnp.arange(state.scan_rate, dtype=jnp.int32)) % n_blocks
@@ -196,7 +207,91 @@ def nb_observe(state: NBState, block_ids: jax.Array) -> NBState:
     )
 
 
+@partial(jax.jit, donate_argnums=0)
+def nb_observe(state: NBState, block_ids: jax.Array) -> NBState:
+    return _nb_observe(state, block_ids)
+
+
 def nb_estimate(state: NBState) -> jax.Array:
     """NB's 'hotness' signal: hint-fault counts (recency proxy).
     Two-touch gating is applied by the policy layer (candidates = faults >= 2)."""
     return state.faults
+
+
+# =====================================================  fused bundle (epoch)
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TelemetryBundle:
+    """All three collectors plus the device-side ground-truth counter as ONE
+    pytree, so a whole epoch of batches is observed with a single jit
+    dispatch (``observe_all`` ``lax.scan``s over the batch axis) instead of
+    three dispatches + a host ``np.add.at`` per batch.
+
+    ``true_counts`` is the exact access histogram the evaluation compares
+    against — it is what an ideal oracle sees, kept on device so the fused
+    path never synchronises with the host mid-epoch.
+    """
+    hmu: HMUState
+    pebs: PEBSState
+    nb: NBState
+    true_counts: jax.Array     # (n_blocks,) int32 exact histogram
+
+
+def bundle_init(
+    n_blocks: int,
+    pebs_period: int = 10007,
+    nb_scan_rate: int = 1,
+    hmu_log_capacity: int = 1 << 33,
+) -> TelemetryBundle:
+    return TelemetryBundle(
+        hmu=hmu_init(n_blocks, log_capacity=hmu_log_capacity),
+        pebs=pebs_init(n_blocks, period=pebs_period),
+        nb=nb_init(n_blocks, scan_rate=nb_scan_rate),
+        true_counts=jnp.zeros((n_blocks,), jnp.int32),
+    )
+
+
+def _count_observe(counts: jax.Array, block_ids: jax.Array) -> jax.Array:
+    flat = block_ids.reshape(-1)
+    return counts.at[flat].add(1, mode="drop")
+
+
+@partial(jax.jit, donate_argnums=0)
+def count_observe(counts: jax.Array, block_ids: jax.Array) -> jax.Array:
+    """Ground-truth histogram update (device-side ``np.add.at`` analogue)."""
+    return _count_observe(counts, block_ids)
+
+
+def _bundle_observe(bundle: TelemetryBundle, block_ids: jax.Array) -> TelemetryBundle:
+    return TelemetryBundle(
+        hmu=_hmu_observe(bundle.hmu, block_ids),
+        pebs=_pebs_observe(bundle.pebs, block_ids),
+        nb=_nb_observe(bundle.nb, block_ids),
+        true_counts=_count_observe(bundle.true_counts, block_ids),
+    )
+
+
+# Python-side trace counter: observe_all's body runs once per (shape, static)
+# combination; tests use this to prove the fused path compiles once and then
+# issues exactly one dispatch per epoch.
+TRACE_COUNTS = {"observe_all": 0}
+
+
+@partial(jax.jit, donate_argnums=0)
+def observe_all(bundle: TelemetryBundle, batches: jax.Array) -> TelemetryBundle:
+    """Observe a whole epoch in one dispatch.
+
+    ``batches`` is the epoch's access stream as ``(n_batches, batch_size)``
+    block ids (equal-size batches; pad with a repeated id if needed — every
+    access is still counted, the paper's collectors have no notion of batch
+    boundaries).  The scan applies the identical per-batch update the
+    unfused path uses, in the same order, so collector states match the
+    per-batch path bit-for-bit.
+    """
+    TRACE_COUNTS["observe_all"] += 1
+
+    def step(b: TelemetryBundle, block_ids: jax.Array):
+        return _bundle_observe(b, block_ids), None
+
+    out, _ = jax.lax.scan(step, bundle, batches)
+    return out

@@ -7,18 +7,23 @@ capacity-tier) managed by HMU-style telemetry:
     exact per-block access counts are a segment-sum of the token stream —
     the jit-side analogue of the gather_count Pallas kernel's fused counters
     (which is what runs on real TPU hardware).
-  * **policy**: oracle top-K / reactive / proactive from core.policy.
-  * **placement**: block promotions between steps (host-side control plane,
-    like the paper's Tiering Agent); the data plane (gather) is tier-oblivious
-    because the TieredStore address space makes promoted rows transparent.
+  * **policy**: oracle top-K / reactive / proactive from core.policy, driven
+    per *epoch* (rebalance snapshots the counters, so reactive/proactive see
+    epoch-delta hotness, not all-time sums).
+  * **placement**: block migrations between steps (host-side control plane,
+    like the paper's Tiering Agent): explicit ``coldest_victims`` demotions
+    followed by promotions via ``TieredStore.migrate``; the data plane
+    (gather) is tier-oblivious because the TieredStore address space makes
+    promoted rows transparent.
   * **accounting**: the cost model (TPU profile: HBM vs host-over-PCIe)
-    converts the per-tier access mix into modeled embed-lookup time, so runs
-    report the tiering benefit the way Table 1 does.
+    converts the per-tier access mix into modeled embed-lookup time; the
+    ``epoch`` loop keeps a per-epoch history the way the EpochRuntime's
+    trajectories do.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 import jax
@@ -34,8 +39,12 @@ class TieredEmbedding:
     store: TieredStore
     counts: np.ndarray                   # exact per-block access counts (HMU)
     system: MemSystem = TPU_V5E_SYSTEM
-    policy: str = "oracle"               # oracle | proactive
+    policy: str = "oracle"               # oracle | proactive | reactive
+    ewma_alpha: float = 0.5
+    reactive_threshold: int = 2
     _pred: Optional[np.ndarray] = None   # EWMA state for proactive
+    _last_counts: Optional[np.ndarray] = None   # epoch-delta snapshot
+    history: List[dict] = dataclasses.field(default_factory=list)
 
     @staticmethod
     def create(table: jax.Array, block_rows: int = 8,
@@ -53,21 +62,74 @@ class TieredEmbedding:
         blocks = np.asarray(tokens).reshape(-1) // self.store.block_rows
         np.add.at(self.counts, blocks, 1)
 
+    def _epoch_counts(self) -> np.ndarray:
+        """Counts accumulated since the last rebalance (epoch-local hotness)."""
+        if self._last_counts is None:
+            return self.counts.copy()
+        return self.counts - self._last_counts
+
     # --------------------------------------------------------------- control
     def rebalance(self) -> int:
         """Run the promotion policy; returns #blocks promoted this epoch."""
         k = self.store.n_slots
+        delta = self._epoch_counts()
+        clipped = np.minimum(delta, np.iinfo(np.int32).max).astype(np.int32)
         if self.policy == "proactive":
-            pred = self.counts.astype(np.float32) if self._pred is None \
-                else 0.5 * self.counts + 0.5 * self._pred
-            self._pred = pred
-            plan = policy_lib.oracle_top_k(jnp.asarray(pred.astype(np.int32)), k)
+            if self._pred is None:
+                self._pred = np.zeros(self.counts.shape, np.float32)
+            pred, plan = policy_lib.proactive_ewma(
+                jnp.asarray(self._pred), jnp.asarray(clipped, jnp.float32),
+                k, alpha=self.ewma_alpha)
+            self._pred = np.asarray(pred)
+        elif self.policy == "reactive":
+            # watermark demotion first: free residents this epoch never
+            # touched, else the store fills once and reactive freezes forever
+            b2s = np.asarray(self.store.block_to_slot)
+            resident = np.nonzero(b2s >= 0)[0]
+            idle = resident[delta[resident] == 0]
+            if idle.size:
+                self.store = self.store.demote(jnp.asarray(idle, jnp.int32))
+            free = k - int(self.store.fast_occupancy())
+            plan = policy_lib.reactive_watermark(
+                jnp.asarray(clipped), self.reactive_threshold,
+                jnp.asarray(free), max_moves=k)
         else:
             plan = policy_lib.oracle_top_k(jnp.asarray(
-                self.counts.astype(np.int32)), k)
+                np.minimum(self.counts, np.iinfo(np.int32).max).astype(np.int32)), k)
+        self._last_counts = self.counts.copy()
+
+        # Explicit demotion: when promotions exceed free slots, evict the
+        # epoch-coldest residents (never blocks the plan still wants).
+        want = np.asarray(plan.promote).reshape(-1)
+        want = want[want >= 0]
+        b2s = np.asarray(self.store.block_to_slot)
+        n_new = int(np.sum(b2s[want] < 0)) if want.size else 0
+        free = k - int(self.store.fast_occupancy())
+        need = n_new - free
+        victims = None
+        if need > 0:
+            victims = policy_lib.plan_eviction(
+                jnp.asarray(delta.astype(np.float32)), jnp.asarray(want),
+                self.store.slot_to_block, int(need))
         before = int(self.store.fast_occupancy())
-        self.store = self.store.promote(plan.promote)
-        return int(self.store.fast_occupancy()) - before
+        self.store = self.store.migrate(plan.promote, victims)
+        return int(self.store.fast_occupancy()) - before + (
+            0 if victims is None else int(np.sum(np.asarray(victims) >= 0)))
+
+    def epoch(self, tokens) -> dict:
+        """One online epoch: observe the step's tokens, account the modeled
+        lookup time under the placement that served them, then rebalance."""
+        prev_delta_base = (self._last_counts.copy()
+                           if self._last_counts is not None else
+                           np.zeros_like(self.counts))
+        self.observe_tokens(tokens)
+        epoch_counts = self.counts - prev_delta_base
+        rep = self.modeled_lookup_time_s(epoch_counts)
+        moved = self.rebalance()
+        rep = dict(rep, epoch=len(self.history), moved=moved,
+                   policy=self.policy)
+        self.history.append(rep)
+        return rep
 
     # ------------------------------------------------------------ accounting
     def modeled_lookup_time_s(self, n_lookups_by_block: Optional[np.ndarray]

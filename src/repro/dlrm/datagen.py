@@ -13,7 +13,7 @@ so the top-K pages (K = the paper's promoted count, ~9 % of pages) carry
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+from typing import Iterator, Optional
 
 import numpy as np
 
@@ -97,6 +97,56 @@ def batches(spec: DLRMTraceSpec, n_batches: int, seed: int = 0) -> Iterator[np.n
     s = ZipfPageSampler(spec, seed)
     for _ in range(n_batches):
         yield s.sample(spec.lookups_per_batch)
+
+
+class PhaseShiftSampler:
+    """Zipf popularity whose hot set *rotates* between phases.
+
+    Phase ``p`` maps popularity rank ``r`` to page
+    ``rank_to_page[(r + p * rotate_by) % n_pages]`` — same skew, disjoint(ish)
+    hot head each phase.  This is the workload where frequency-tracking
+    telemetry driven per-epoch (proactive/EWMA over HMU counts) should win
+    and recency-based NB collapses: NB's cumulative two-touch faults keep
+    ranking the *previous* phase's pages hot, while an epoch-delta counter
+    re-ranks within one epoch of the shift (the NeoMem / HybridTier
+    phase-change regime).
+    """
+
+    def __init__(self, spec: DLRMTraceSpec, rotate_by: Optional[int] = None,
+                 seed: int = 0):
+        self.spec = spec
+        self._base = ZipfPageSampler(spec, seed)
+        n = spec.n_pages
+        self.rotate_by = int(rotate_by) if rotate_by is not None else n // 3
+        self._rng = np.random.default_rng(seed + 2)
+
+    def sample(self, n: int, phase: int = 0) -> np.ndarray:
+        u = self._rng.random(n)
+        rank = np.searchsorted(self._base.cdf, u)
+        shifted = (rank + phase * self.rotate_by) % self.spec.n_pages
+        return self._base.rank_to_page[shifted]
+
+    def true_top_k_pages(self, k: int, phase: int = 0) -> np.ndarray:
+        n = self.spec.n_pages
+        ranks = (np.arange(k) + phase * self.rotate_by) % n
+        return self._base.rank_to_page[ranks]
+
+
+def phase_shift_epochs(
+    spec: DLRMTraceSpec,
+    n_epochs: int,
+    batches_per_epoch: int,
+    shift_at: int,
+    rotate_by: Optional[int] = None,
+    seed: int = 0,
+) -> Iterator[np.ndarray]:
+    """Epoch-shaped stream ``(batches_per_epoch, lookups_per_batch)`` whose
+    hot set rotates once at epoch ``shift_at`` (phase 0 before, 1 after)."""
+    s = PhaseShiftSampler(spec, rotate_by=rotate_by, seed=seed)
+    for e in range(n_epochs):
+        phase = int(e >= shift_at)
+        yield np.stack([s.sample(spec.lookups_per_batch, phase=phase)
+                        for _ in range(batches_per_epoch)])
 
 
 def trace_stats(spec: DLRMTraceSpec, n_batches: int = 20, seed: int = 0) -> dict:

@@ -4,6 +4,9 @@
   resulting tiering speedups (paper: HMU 2.94x vs PEBS, 1.73x vs NB).
 * ``run_table1`` — DLRM embedding-bag inference: HMU vs Linux NB vs DRAM-only
   (paper: 1.94x vs NB, 1.03x slower than DRAM-only, 9% top-tier footprint).
+* ``run_online`` — the §VI online regime: the EpochRuntime drives all five
+  policies over a phase-shifting DLRM trace and returns the per-epoch
+  trajectory (time / accuracy / coverage series instead of one end state).
 
 Both run at full paper scale (5.24 M / 2.62 M pages) as *trace* sims: no 20 GB
 table is allocated, only per-page counters — exactly the device-side view the
@@ -32,6 +35,7 @@ PEBS is handicapped only by its sampling period (coverage), per the paper.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Dict, Optional
 
 import numpy as np
@@ -39,6 +43,7 @@ import numpy as np
 from ..core import metrics, telemetry as tel
 from ..core.costmodel import CXL_SYSTEM, MemSystem
 from ..core.manager import TieringManager
+from ..core.runtime import ALL_POLICIES, EpochRuntime
 from ..workloads import mmap_bench
 from . import datagen
 
@@ -129,9 +134,13 @@ def run_table1(
     mgr = TieringManager(n_pages, k, nb_scan_rate=scan_rate)
     sampler = datagen.ZipfPageSampler(spec, seed)
 
-    # ---- warmup/profiling: allocations in CXL, collectors observe
-    for _ in range(warmup_batches):
-        mgr.observe(sampler.sample(spec.lookups_per_batch))
+    # ---- warmup/profiling: allocations in CXL, collectors observe.
+    # Fused path: each iteration's batches are observed in ONE jit dispatch
+    # (lax.scan over the batch axis) — bit-identical to per-batch observe.
+    for _ in range(warmup_iterations):
+        mgr.observe_epoch(np.stack([
+            sampler.sample(spec.lookups_per_batch)
+            for _ in range(batches_per_iteration)]))
     mgr.hmu = tel.hmu_drain_cost(mgr.hmu)
 
     # ---- eval traffic (expectation replay of the stationary distribution)
@@ -306,3 +315,57 @@ def run_fig3(
     m["hmu"]["speedup_vs_nb"] = m["hmu"]["reads_per_s"] / m["nb"]["reads_per_s"]
     out["overlap_nb_hmu"] = metrics.overlap(nb_final, hmu_sel, k)
     return out
+
+
+# =====================================================================  online
+def run_online(
+    spec: datagen.DLRMTraceSpec = datagen.SMALL,
+    system: MemSystem = CXL_SYSTEM,
+    n_epochs: int = 8,
+    batches_per_epoch: int = 4,
+    shift_at: int = 4,
+    k_hot: Optional[int] = None,
+    policies: tuple = ALL_POLICIES,
+    pebs_period: int = 401,
+    rotate_by: Optional[int] = None,
+    seed: int = 0,
+) -> dict:
+    """§VI online regime: multi-epoch phase-shifting DLRM trace through the
+    EpochRuntime.  The hot set rotates at ``shift_at``; the trajectory shows
+    which telemetry/policy pairs re-converge and which collapse (NB).
+
+    Returns ``{"trajectory": per-epoch dict, "summary": headline numbers}``.
+    """
+    n_pages = spec.n_pages
+    k = min(k_hot if k_hot is not None else max(n_pages // 20, 1), n_pages)
+    rt = EpochRuntime(
+        n_pages, k, policies=policies, system=system,
+        bytes_per_access=float(spec.row_bytes),
+        block_bytes=float(spec.page_bytes),
+        pebs_period=pebs_period,
+        nb_scan_rate=max(n_pages // batches_per_epoch, 1),
+    )
+    traj = rt.run(datagen.phase_shift_epochs(
+        spec, n_epochs=n_epochs, batches_per_epoch=batches_per_epoch,
+        shift_at=shift_at, rotate_by=rotate_by, seed=seed))
+
+    summary = {}
+    for name in policies:
+        ts = traj.times(name)
+        accs = np.array([r.accuracy for r in traj.lane(name)])
+        post = slice(shift_at, None)
+        summary[name] = {
+            "mean_time_us": float(ts.mean() * 1e6),
+            "post_shift_mean_time_us": float(ts[post].mean() * 1e6),
+            "final_accuracy": float(accs[-1]),
+            "post_shift_recovery_epochs": int(np.argmax(
+                accs[post] >= 0.5)) if (accs[post] >= 0.5).any() else -1,
+        }
+    if "proactive_ewma" in policies and "nb_two_touch" in policies:
+        summary["proactive_vs_nb_post_shift"] = float(
+            summary["nb_two_touch"]["post_shift_mean_time_us"]
+            / summary["proactive_ewma"]["post_shift_mean_time_us"])
+    return {
+        "trajectory": json.loads(traj.to_json(shift_at=shift_at)),
+        "summary": summary,
+    }

@@ -35,7 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import (ARCH_IDS, get_config, get_optimizer_name,
                            get_sharding_overrides)
 from repro.launch import sharding as sh
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.launch.shapes import SHAPES, applicable, input_specs
 from repro.models.model import abstract_params, ModelConfig
 from repro.optim import get_optimizer, cosine_schedule
@@ -118,8 +118,10 @@ def build_step(cfg: ModelConfig, shape, mesh, overrides):
         bspecs = sh.batch_specs(mesh, cfg, batch_abs)
         jitted = jax.jit(
             step_fn,
-            in_shardings=(pspecs, opt_specs, bspecs),
-            out_shardings=(pspecs, opt_specs, None),
+            # explicit NamedShardings: older jax (< 0.6) rejects raw
+            # PartitionSpecs in in_shardings even under an ambient mesh
+            in_shardings=sh.named(mesh, (pspecs, opt_specs, bspecs)),
+            out_shardings=(*sh.named(mesh, (pspecs, opt_specs)), None),
             donate_argnums=(0, 1),
         )
         return jitted, (params_abs, opt_state_abs, batch_abs)
@@ -135,9 +137,10 @@ def build_step(cfg: ModelConfig, shape, mesh, overrides):
                                   embeds=batch.get("embeds"),
                                   positions=batch.get("positions"))
 
-        jitted = jax.jit(fn, in_shardings=(pspecs, bspecs),
-                         out_shardings=(sh.batch_pspec(mesh, shape.global_batch),
-                                        cache_specs))
+        jitted = jax.jit(fn, in_shardings=sh.named(mesh, (pspecs, bspecs)),
+                         out_shardings=sh.named(
+                             mesh, (sh.batch_pspec(mesh, shape.global_batch),
+                                    cache_specs)))
         return jitted, (params_abs, batch_abs)
 
     # decode
@@ -150,8 +153,8 @@ def build_step(cfg: ModelConfig, shape, mesh, overrides):
         logits, cache, _ = engine.decode_step(params, cfg, cache, tokens)
         return logits, cache
 
-    jitted = jax.jit(fn, in_shardings=(pspecs, cache_specs, bspec),
-                     out_shardings=(bspec, cache_specs),
+    jitted = jax.jit(fn, in_shardings=sh.named(mesh, (pspecs, cache_specs, bspec)),
+                     out_shardings=sh.named(mesh, (bspec, cache_specs)),
                      donate_argnums=(1,))
     return jitted, (params_abs, cache_abs, tok_abs)
 
@@ -181,7 +184,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     overrides = get_sharding_overrides(arch)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         jitted, args = build_step(cfg, shape, mesh, overrides)
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0

@@ -323,7 +323,16 @@ def analyze(text: str, n_devices_per_group: int = 16) -> dict:
                 mb = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", op.rest)
                 if mb:
                     acc.add(eval_comp(mb.group(1), depth + 1), 1.0)
-                acc.hbm_bytes += _op_hbm_bytes(comp, op)
+                # A resolvable plain call's traffic is whatever its callee's
+                # ops do — charging the call boundary too double-counts every
+                # operand at full size (e.g. the CPU backend wraps gather
+                # fusions in %parallel_* calls, turning a 4 KB sliced read
+                # into the whole table).  Opaque targets (custom-call,
+                # async-start without a parsed callee) still pay boundary
+                # bytes since we cannot see inside them.
+                if not (op.opcode in ("call", "async-start")
+                        and mb and mb.group(1) in comps):
+                    acc.hbm_bytes += _op_hbm_bytes(comp, op)
             elif op.opcode == "conditional":
                 for mb in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
                                       r"(?:true|false)_computation=%?([\w.\-]+))",

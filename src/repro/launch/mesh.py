@@ -23,3 +23,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests (e.g. (2,4) on 8 host devices)."""
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def use_mesh(mesh):
+    """Ambient-mesh context, portable across jax versions: ``jax.set_mesh``
+    where it exists (>= 0.6), else the Mesh object itself (a context manager
+    with the same ambient-mesh effect on older releases)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh

@@ -32,6 +32,17 @@ import jax
 import jax.numpy as jnp
 
 
+def _ambient_mesh():
+    """The mesh installed by the caller's ``use_mesh``/``set_mesh`` context,
+    portable across jax versions: ``get_abstract_mesh`` on >= 0.6; the
+    thread-resources physical mesh (what ``with mesh:`` sets) on 0.4.x."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        return get_abstract()
+    from jax._src import mesh as _mesh_internal
+    return _mesh_internal.thread_resources.env.physical_mesh
+
+
 class MoEParams(NamedTuple):
     router: jax.Array          # (D, E)
     w_gate: jax.Array          # (E, D, Fe)
@@ -162,7 +173,7 @@ def _moe_shard_map(x, p: MoEParams, tope, topw, top_k, capacity_factor,
     capacity = -(-capacity // gm) * gm            # multiple of gm
 
     bax = batch_axes
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = _ambient_mesh()
     xspec = P(bax, "model", None)
     kspec = P(bax, "model", None)
 

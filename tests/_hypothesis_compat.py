@@ -1,0 +1,100 @@
+"""Optional-``hypothesis`` shim for the property tests.
+
+The tier-1 suite must collect (and pass) on machines without the
+``hypothesis`` package.  When hypothesis is installed we re-export the real
+``given`` / ``settings`` / ``strategies``; otherwise a minimal deterministic
+fallback generates ``max_examples`` pseudo-random examples per test from the
+same two strategy combinators the suite actually uses (``st.integers`` and
+``st.lists``).  The fallback is not a shrinker — a failing example is reported
+as a plain assertion with the drawn arguments in the message.
+"""
+from __future__ import annotations
+
+import itertools
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib as _zlib
+
+    import numpy as _np
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def example(self, rng) -> object:
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=0, max_value=1 << 16):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def example(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=16):
+            self.elements = elements
+            self.lo, self.hi = int(min_size), int(max_size)
+
+        def example(self, rng):
+            n = int(rng.integers(self.lo, self.hi + 1))
+            return [self.elements.example(rng) for _ in range(n)]
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 16):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=16):
+            return _Lists(elements, min_size, max_size)
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = int(max_examples)
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest would follow __wrapped__ to
+            # the original signature and demand fixtures for the drawn args.
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                # deterministic per-test seed so failures reproduce
+                # (crc32, not hash(): str hashing is randomized per process)
+                seed = _zlib.crc32(fn.__name__.encode())
+                rng = _np.random.default_rng(seed)
+                for i in itertools.count():
+                    if i >= n:
+                        break
+                    drawn_a = [s.example(rng) for s in arg_strategies]
+                    drawn_kw = {k: s.example(rng)
+                                for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, *drawn_a, **{**kwargs, **drawn_kw})
+                    except Exception as e:  # noqa: BLE001 - re-raise annotated
+                        raise AssertionError(
+                            f"falsifying example #{i} for {fn.__name__}: "
+                            f"args={drawn_a} kwargs={drawn_kw}"
+                        ) from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._compat_max_examples = getattr(
+                fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import TieredStore, policy, metrics, telemetry as tel
 from repro.core.costmodel import CXL_SYSTEM, TPU_V5E_SYSTEM

@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.gather_count import gather_count, gather_count_ref
 from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref

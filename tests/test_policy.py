@@ -1,0 +1,126 @@
+"""Unit tests for the §VI policies that had no dedicated coverage:
+reactive_watermark (capacity clamping), proactive_ewma (rotating hot-set
+prediction), hinted (rank-blend monotonicity), coldest_victims (empty-slot
+handling)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import policy
+
+
+def ids_of(plan) -> list:
+    a = np.asarray(plan.promote).reshape(-1)
+    return [int(x) for x in a if x >= 0]
+
+
+# ---------------------------------------------------------- reactive_watermark
+def test_reactive_clamps_to_free_slots():
+    counts = jnp.asarray([50, 40, 30, 20, 10, 0])
+    plan = policy.reactive_watermark(counts, hot_threshold=5,
+                                     free_slots=jnp.asarray(3), max_moves=6)
+    assert ids_of(plan) == [0, 1, 2]      # 5 candidates, only 3 slots
+
+
+def test_reactive_zero_free_slots_promotes_nothing():
+    counts = jnp.asarray([50, 40, 30])
+    plan = policy.reactive_watermark(counts, hot_threshold=1,
+                                     free_slots=jnp.asarray(0), max_moves=3)
+    assert ids_of(plan) == []
+
+
+def test_reactive_threshold_gates_promotion():
+    counts = jnp.asarray([50, 9, 30, 2])
+    plan = policy.reactive_watermark(counts, hot_threshold=10,
+                                     free_slots=jnp.asarray(4), max_moves=4)
+    assert set(ids_of(plan)) == {0, 2}    # 9 and 2 are below the watermark
+
+
+def test_reactive_free_slots_beyond_candidates_is_safe():
+    counts = jnp.asarray([7, 0, 0, 0])
+    plan = policy.reactive_watermark(counts, hot_threshold=5,
+                                     free_slots=jnp.asarray(100), max_moves=4)
+    assert ids_of(plan) == [0]
+
+
+# ------------------------------------------------------------- proactive_ewma
+def test_proactive_predicts_rotating_hot_set_before_retouch():
+    """Hot set alternates A={0,1} / B={2,3} per epoch.  After an A epoch,
+    EWMA memory still ranks B above never-touched blocks — B is promoted
+    *before* it is re-touched (the §VI 'proactive movement' claim)."""
+    n, k = 6, 4
+    a = jnp.asarray([100.0, 90.0, 0.0, 0.0, 0.0, 0.0])
+    b = jnp.asarray([0.0, 0.0, 100.0, 90.0, 0.0, 0.0])
+    pred = jnp.zeros(n)
+    for counts in (a, b, a, b, a):        # last observation is phase A
+        pred, plan = policy.proactive_ewma(pred, counts, k=k, alpha=0.5)
+    got = ids_of(plan)
+    assert set(got) == {0, 1, 2, 3}       # B predicted hot though untouched now
+    assert 4 not in got and 5 not in got
+
+
+def test_proactive_alpha_one_is_memoryless():
+    pred, plan = policy.proactive_ewma(
+        jnp.asarray([1000.0, 0.0, 0.0]), jnp.asarray([0.0, 5.0, 1.0]),
+        k=1, alpha=1.0)
+    assert ids_of(plan) == [1]            # history fully discounted
+
+
+def test_proactive_never_promotes_zero_prediction():
+    pred, plan = policy.proactive_ewma(
+        jnp.zeros(4), jnp.asarray([0.0, 0.0, 3.0, 0.0]), k=4, alpha=0.5)
+    assert ids_of(plan) == [2]
+
+
+# -------------------------------------------------------------------- hinted
+def test_hinted_rank_blend_monotone_in_hint():
+    """Raising one block's hint (all else equal) never lowers its position
+    in the promotion order."""
+    counts = jnp.asarray([10, 20, 30, 40])
+    n = counts.shape[0]
+
+    def position(hint_val: float, block: int = 0) -> int:
+        hints = jnp.zeros((n,)).at[block].set(hint_val)
+        order = ids_of(policy.hinted(counts, hints, k=n, hint_weight=0.5))
+        return order.index(block)
+
+    positions = [position(h) for h in (0.0, 0.25, 0.5, 0.75, 1.0)]
+    assert positions == sorted(positions, reverse=True)  # strictly no demotion
+    assert positions[-1] <= positions[0]
+
+
+def test_hinted_zero_weight_is_pure_telemetry_order():
+    counts = jnp.asarray([1, 4, 3, 2])
+    hints = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+    plan = policy.hinted(counts, hints, k=4, hint_weight=0.0)
+    assert ids_of(plan) == [1, 2, 3, 0]
+
+
+def test_hinted_full_weight_is_pure_hint_order():
+    counts = jnp.asarray([1000, 0, 0, 0])
+    hints = jnp.asarray([0.0, 0.3, 1.0, 0.6])
+    plan = policy.hinted(counts, hints, k=2, hint_weight=1.0)
+    assert ids_of(plan) == [2, 3]
+
+
+# ----------------------------------------------------------- coldest_victims
+def test_coldest_victims_skips_empty_slots():
+    est = jnp.asarray([5, 50, 7, 90])
+    s2b = jnp.asarray([1, -1, 3, -1, 0])   # two empty slots interleaved
+    vic = np.asarray(policy.coldest_victims(est, s2b, n=2))
+    # resident blocks are {1, 3, 0}; the coldest two are 0 (est 5), 1 (est 50)
+    assert [int(x) for x in vic] == [0, 1]
+
+
+def test_coldest_victims_all_empty_returns_padding():
+    est = jnp.asarray([5, 50])
+    s2b = jnp.asarray([-1, -1, -1])
+    vic = np.asarray(policy.coldest_victims(est, s2b, n=2))
+    assert (vic == -1).all()
+
+
+def test_coldest_victims_n_exceeds_occupancy_pads_with_minus_one():
+    est = jnp.asarray([5, 50, 7])
+    s2b = jnp.asarray([2, -1, -1, -1])
+    vic = np.asarray(policy.coldest_victims(est, s2b, n=3))
+    assert int(vic[0]) == 2
+    assert (vic[1:] == -1).all()

@@ -1,0 +1,189 @@
+"""Epoch-driven runtime tests: the fused observe_all path is bit-identical to
+the per-batch path and issues one jit dispatch per epoch; on the phase-shift
+workload proactive/EWMA over HMU counts beats NB two-touch on modeled time in
+every post-shift epoch (the ISSUE's acceptance criteria)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import telemetry as tel
+from repro.core.manager import TieringManager
+from repro.core.runtime import ALL_POLICIES, EpochRuntime
+from repro.dlrm import datagen
+
+
+# ------------------------------------------------------------- fused observe
+def make_batches(n_blocks=400, n_batches=5, batch=3000, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, n_blocks, (n_batches, batch)).astype(np.int32)
+
+
+def test_observe_all_bit_identical_to_per_batch_path():
+    n = 400
+    batches = make_batches(n)
+    kw = dict(pebs_period=101, nb_scan_rate=90)
+    ref = TieringManager(n, 40, **kw)
+    for b in batches:
+        ref.observe(b)
+    fused = TieringManager(n, 40, **kw)
+    fused.observe_epoch(batches)
+    ref_leaves = jax.tree_util.tree_leaves(ref.bundle)
+    fused_leaves = jax.tree_util.tree_leaves(fused.bundle)
+    assert len(ref_leaves) == len(fused_leaves)
+    for a, b in zip(ref_leaves, fused_leaves):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_observe_all_one_dispatch_per_epoch(monkeypatch):
+    """The fused path must issue exactly one observe_all call per epoch, never
+    fall back to the per-batch collector jits, and re-use one trace across
+    equal-shaped epochs."""
+    n = 256
+    batches = make_batches(n, n_batches=4, batch=1000)
+    mgr = TieringManager(n, 32, pebs_period=97, nb_scan_rate=64)
+
+    dispatches = []
+    real_observe_all = tel.observe_all
+    monkeypatch.setattr(
+        tel, "observe_all",
+        lambda bundle, arr: (dispatches.append(arr.shape),
+                             real_observe_all(bundle, arr))[1])
+
+    def forbidden(*a, **k):  # pragma: no cover - failure path
+        raise AssertionError("fused path must not use per-batch observe jits")
+
+    monkeypatch.setattr(tel, "hmu_observe", forbidden)
+    monkeypatch.setattr(tel, "pebs_observe", forbidden)
+    monkeypatch.setattr(tel, "nb_observe", forbidden)
+    monkeypatch.setattr(tel, "count_observe", forbidden)
+
+    # warm the trace with an identically-shaped manager, then count re-traces
+    tel.observe_all(tel.bundle_init(n, pebs_period=97, nb_scan_rate=64),
+                    jnp.asarray(batches))
+    dispatches.clear()
+    traces_before = tel.TRACE_COUNTS["observe_all"]
+    mgr.observe_epoch(batches)
+    mgr.observe_epoch(make_batches(n, n_batches=4, batch=1000, seed=1))
+    assert dispatches == [batches.shape, batches.shape]
+    assert tel.TRACE_COUNTS["observe_all"] == traces_before  # no re-trace
+
+
+def test_observe_epoch_rejects_flat_stream():
+    mgr = TieringManager(64, 8)
+    with pytest.raises(ValueError):
+        mgr.observe_epoch(np.zeros(100, np.int32))
+
+
+# ----------------------------------------------------------- runtime basics
+def test_runtime_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        EpochRuntime(64, 8, policies=("oracle_top_k_typo",))
+
+
+def test_runtime_records_and_lane_invariants():
+    n, k = 500, 50
+    rt = EpochRuntime(n, k, policies=ALL_POLICIES, bytes_per_access=64.0,
+                      block_bytes=1024.0, pebs_period=101, nb_scan_rate=125)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        rt.step(rng.integers(0, n, (2, 4000)).astype(np.int32))
+    for name, lane in rt.lanes.items():
+        recs = rt.records[name]
+        assert [r.epoch for r in recs] == [0, 1, 2]
+        # slot<->block maps stay mutually consistent and capacity-bounded
+        s2b, b2s = lane.slot_to_block, lane.block_to_slot
+        assert (s2b >= 0).sum() == (b2s >= 0).sum() <= k
+        for slot, blk in enumerate(s2b):
+            if blk >= 0:
+                assert b2s[blk] == slot
+        for r in recs:
+            assert r.resident <= k
+            assert r.time_s >= r.access_s >= 0
+            assert 0.0 <= r.accuracy <= 1.0 and 0.0 <= r.coverage <= 1.0
+    # epoch 0 serves everything from the slow tier (cold start)
+    for name in rt.records:
+        assert rt.records[name][0].resident == 0
+
+
+def test_runtime_uniform_stream_converges_all_hmu_lanes():
+    """On a stationary skewed stream every HMU-fed lane should reach high
+    coverage of the true hot set after a couple of epochs."""
+    spec = dataclasses.replace(datagen.SMALL, lookups_per_batch=20_000)
+    n, k = spec.n_pages, 200
+    rt = EpochRuntime(n, k, policies=("hmu_oracle", "proactive_ewma"),
+                      bytes_per_access=spec.row_bytes,
+                      block_bytes=spec.page_bytes, nb_scan_rate=n // 2)
+    s = datagen.ZipfPageSampler(spec, seed=3)
+    for _ in range(4):
+        rt.step(np.stack([s.sample(spec.lookups_per_batch) for _ in range(2)]))
+    for name in ("hmu_oracle", "proactive_ewma"):
+        assert rt.records[name][-1].coverage > 0.7, name
+
+
+def test_trajectory_json_roundtrip():
+    import json
+
+    rt = EpochRuntime(128, 16, policies=("hmu_oracle",), nb_scan_rate=32)
+    rng = np.random.default_rng(1)
+    rt.step(rng.integers(0, 128, (2, 500)).astype(np.int32))
+    data = json.loads(rt.trajectory().to_json(shift_at=0))
+    assert data["n_blocks"] == 128 and data["k_hot"] == 16
+    rec = data["lanes"]["hmu_oracle"][0]
+    assert {"epoch", "time_s", "accuracy", "coverage",
+            "promoted", "demoted"} <= set(rec)
+
+
+# ------------------------------------------------- phase-shift acceptance
+def test_proactive_beats_nb_every_post_shift_epoch():
+    """ISSUE acceptance: on the phase-shift workload, proactive_ewma over HMU
+    counts beats nb_two_touch on modeled time in EVERY post-shift epoch."""
+    spec = dataclasses.replace(datagen.SMALL, lookups_per_batch=20_000)
+    n = spec.n_pages
+    k, shift_at, n_epochs = 250, 3, 7
+    rt = EpochRuntime(
+        n, k, policies=("proactive_ewma", "nb_two_touch"),
+        bytes_per_access=spec.row_bytes, block_bytes=spec.page_bytes,
+        pebs_period=401, nb_scan_rate=n // 4,
+    )
+    traj = rt.run(datagen.phase_shift_epochs(
+        spec, n_epochs=n_epochs, batches_per_epoch=4, shift_at=shift_at,
+        rotate_by=n // 2, seed=0))
+    pro = traj.times("proactive_ewma")[shift_at:]
+    nb = traj.times("nb_two_touch")[shift_at:]
+    assert pro.shape == nb.shape == (n_epochs - shift_at,)
+    assert (pro < nb).all(), (pro, nb)
+
+
+def test_proactive_recovers_accuracy_after_shift_nb_does_not():
+    spec = dataclasses.replace(datagen.SMALL, lookups_per_batch=20_000)
+    n, k, shift_at = spec.n_pages, 250, 3
+    rt = EpochRuntime(
+        n, k, policies=("proactive_ewma", "nb_two_touch"),
+        bytes_per_access=spec.row_bytes, block_bytes=spec.page_bytes,
+        nb_scan_rate=n // 4,
+    )
+    traj = rt.run(datagen.phase_shift_epochs(
+        spec, n_epochs=7, batches_per_epoch=4, shift_at=shift_at,
+        rotate_by=n // 2, seed=0))
+    pro_acc = [r.accuracy for r in traj.lane("proactive_ewma")]
+    nb_acc = [r.accuracy for r in traj.lane("nb_two_touch")]
+    # EWMA re-converges after the rotation; NB's cumulative two-touch doesn't
+    assert pro_acc[-1] > 0.5
+    assert pro_acc[-1] > nb_acc[-1] + 0.2
+
+
+def test_phase_shift_generator_rotates_hot_set():
+    spec = datagen.SMALL
+    s = datagen.PhaseShiftSampler(spec, rotate_by=spec.n_pages // 2, seed=0)
+    k = 100
+    before = set(s.true_top_k_pages(k, phase=0).tolist())
+    after = set(s.true_top_k_pages(k, phase=1).tolist())
+    assert not before & after             # fully disjoint hot heads
+    # samples actually concentrate on each phase's hot head
+    for phase, hot in ((0, before), (1, after)):
+        pages = s.sample(20_000, phase=phase)
+        share = np.isin(pages, list(hot)).mean()
+        assert share > 0.5, (phase, share)

@@ -1,0 +1,105 @@
+"""Telemetry edge cases: PEBS cursor continuity across batch boundaries, HMU
+log overflow accounting + drain reset, NB scanner wrap-around at n_blocks."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import telemetry as tel
+
+
+# ------------------------------------------------------ PEBS cursor continuity
+def test_pebs_cursor_continues_across_batch_boundaries():
+    """Sampling every period-th access of the *stream* must be invariant to
+    how the stream is chopped into batches (the cursor carries the phase)."""
+    period = 7
+    rng = np.random.default_rng(0)
+    stream = rng.integers(0, 50, 305).astype(np.int32)  # 305 % 7 != 0
+
+    one = tel.pebs_init(50, period=period)
+    one = tel.pebs_observe(one, jnp.asarray(stream))
+
+    # uneven batch boundaries, none aligned to the period
+    chopped = tel.pebs_init(50, period=period)
+    for part in np.split(stream, [13, 100, 150, 296]):
+        chopped = tel.pebs_observe(chopped, jnp.asarray(part))
+
+    np.testing.assert_array_equal(np.asarray(one.sampled),
+                                  np.asarray(chopped.sampled))
+    assert float(one.cursor) == float(chopped.cursor) == 305.0
+    assert float(one.host_events) == float(chopped.host_events)
+
+
+def test_pebs_samples_exactly_every_period_positions():
+    period = 5
+    st = tel.pebs_init(100, period=period)
+    stream = jnp.asarray(np.arange(12, dtype=np.int32))  # block i at position i
+    st = tel.pebs_observe(st, stream)
+    sampled = np.asarray(st.sampled)
+    # positions 0, 5, 10 sampled -> blocks 0, 5, 10
+    expect = np.zeros(100, np.int32)
+    expect[[0, 5, 10]] = 1
+    np.testing.assert_array_equal(sampled, expect)
+
+
+# --------------------------------------------------------- HMU log overflow
+def test_hmu_overflow_drops_accumulate_across_batches():
+    st = tel.hmu_init(4, log_capacity=10)
+    st = tel.hmu_observe(st, jnp.zeros((6,), jnp.int32))    # 6 in log
+    st = tel.hmu_observe(st, jnp.zeros((6,), jnp.int32))    # 4 fit, 2 dropped
+    st = tel.hmu_observe(st, jnp.zeros((6,), jnp.int32))    # all 6 dropped
+    assert float(st.log_used) == 10.0
+    assert float(st.log_dropped) == 8.0
+    # counter mode never loses events even when the log overflows
+    assert int(np.asarray(st.counts)[0]) == 18
+
+
+def test_hmu_drain_resets_log_and_charges_only_drained_records():
+    st = tel.hmu_init(4, log_capacity=10)
+    st = tel.hmu_observe(st, jnp.zeros((25,), jnp.int32))
+    st = tel.hmu_drain_cost(st, per_record_cost=2.0)
+    assert float(st.log_used) == 0.0            # drained
+    assert float(st.host_events) == 20.0        # 10 records x cost 2
+    assert float(st.log_dropped) == 15.0        # drops are NOT un-dropped
+    # post-drain capacity is available again
+    st = tel.hmu_observe(st, jnp.zeros((4,), jnp.int32))
+    assert float(st.log_used) == 4.0
+    assert float(st.log_dropped) == 15.0
+
+
+# ---------------------------------------------------------- NB wrap-around
+def test_nb_scan_ptr_wraps_at_n_blocks():
+    n = 10
+    st = tel.nb_init(n, scan_rate=7)
+    empty = jnp.zeros((0,), jnp.int32)
+    st = tel.nb_observe(st, empty)              # unmaps 0..6
+    assert int(st.scan_ptr) == 7
+    mapped = np.asarray(st.mapped)
+    np.testing.assert_array_equal(mapped, np.r_[np.zeros(7, bool), np.ones(3, bool)])
+    st = tel.nb_observe(st, empty)              # unmaps 7,8,9 then wraps to 0..3
+    assert int(st.scan_ptr) == 4                # (7 + 7) % 10
+    assert not np.asarray(st.mapped).any()      # full pass completed
+
+
+def test_nb_wrapped_scan_faults_exactly_once_per_touch():
+    n = 10
+    st = tel.nb_init(n, scan_rate=7)
+    empty = jnp.zeros((0,), jnp.int32)
+    st = tel.nb_observe(st, empty)
+    st = tel.nb_observe(st, empty)              # everything unmapped via wrap
+    # touching a block twice in one batch faults once and re-maps it
+    st = tel.nb_observe(st, jnp.asarray([9, 9, 2], jnp.int32))
+    faults = np.asarray(st.faults)
+    assert faults[9] == 1 and faults[2] == 1
+    assert faults.sum() == 2
+    mapped = np.asarray(st.mapped)
+    assert mapped[9] and mapped[2]
+    # host paid exactly one event per faulted block
+    assert float(st.host_events) == 2.0
+
+
+def test_nb_scan_rate_equal_n_blocks_unmaps_everything_each_call():
+    n = 8
+    st = tel.nb_init(n, scan_rate=n)
+    st = tel.nb_observe(st, jnp.asarray([3], jnp.int32))
+    assert int(st.scan_ptr) == 0                # full cycle lands back at 0
+    faults = np.asarray(st.faults)
+    assert faults[3] == 1 and faults.sum() == 1
