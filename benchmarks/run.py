@@ -7,7 +7,11 @@ the paper reports for that artifact).
   table1_dlrm      — §III.B DLRM inference: HMU vs NB vs DRAM-only
   epoch_runtime    — §VI online regime: all five policies over a
                      phase-shifting trace; per-epoch JSON trajectory written
-                     to results/epoch_trajectory.json
+                     to results/epoch_trajectory.json.  With --json, also
+                     benchmarks the fused two-dispatch epoch loop against
+                     the per-lane reference path into
+                     results/BENCH_epoch_runtime.json (fails on >2
+                     dispatches/epoch; --scale smoke for CI)
   telemetry_sweep  — §V coverage-vs-overhead: PEBS period / NB scan sweeps
   kernel_micro     — gather_count / embedding_bag / flash_attention
                      wall-time on CPU oracle path (correctness-scale) +
@@ -74,9 +78,16 @@ def table1_dlrm():
 
 
 # ============================================================= epoch runtime
-def epoch_runtime():
+def epoch_runtime(json_mode: bool = False, scale: str = "full"):
     """Online multi-epoch tiering: fused observe_all + per-epoch migration.
-    Emits the full per-epoch trajectory as JSON (the time-series artifact)."""
+    Emits the full per-epoch trajectory as JSON (the time-series artifact).
+
+    ``json_mode`` additionally benchmarks the fused two-dispatch epoch loop
+    against the per-lane reference path and writes the machine-readable perf
+    trajectory to ``results/BENCH_epoch_runtime.json`` (wall time,
+    dispatches/epoch, blocks/s at each size).  Exits non-zero if the fused
+    path regresses past two dispatches per epoch, so CI catches dispatch
+    creep.  ``scale='smoke'`` shrinks the sizes for the CI fast suite."""
     import json
     from repro.dlrm import tracesim
 
@@ -98,6 +109,80 @@ def epoch_runtime():
     _row("epoch_runtime_proactive_vs_nb", us,
          f"{s['proactive_vs_nb_post_shift']:.2f}x post-shift "
          f"(trajectory -> {path})")
+    if json_mode:
+        _bench_epoch_runtime(dest, scale)
+
+
+def _bench_epoch_runtime(dest: Path, scale: str):
+    """Fused vs reference epoch-loop throughput -> BENCH_epoch_runtime.json."""
+    import json
+    from repro.core import runtime as rtmod
+    from repro.core.runtime import ALL_POLICIES, EpochRuntime
+
+    sizes = ([20_000, 50_000] if scale == "smoke"
+             else [100_000, 1_048_576])
+    n_epochs = 3
+    report = {"scale": scale, "n_epochs_timed": n_epochs, "sizes": []}
+    ok_dispatches = True
+    for n in sizes:
+        k = max(n // 64, 1)
+
+        def epochs(n_ep, seed=0):
+            rng = np.random.default_rng(seed)
+            for _ in range(n_ep):
+                yield (rng.zipf(1.3, size=(2, 20_000)) % n).astype(np.int32)
+
+        entry = {"n_blocks": n, "k_hot": k}
+        runtimes = {}
+        for mode, fused in (("fused", True), ("reference", False)):
+            rt = EpochRuntime(n, k, policies=ALL_POLICIES,
+                              pebs_period=10_007, nb_scan_rate=n // 8,
+                              fused=fused)
+            rt.step(next(epochs(1)))          # warm-up / compile epoch
+            runtimes[mode] = rt
+        # alternate modes over 2 rounds and keep each mode's best wall time,
+        # so a transient load spike can't skew the recorded ratio
+        best = {"fused": float("inf"), "reference": float("inf")}
+        disp = {}
+        for rnd in (1, 2):
+            for mode, rt in runtimes.items():
+                before = dict(rtmod.DISPATCH_COUNTS)
+                t0 = time.time()
+                for b in epochs(n_epochs, seed=rnd):
+                    rt.step(b)
+                best[mode] = min(best[mode], time.time() - t0)
+                delta = {key: rtmod.DISPATCH_COUNTS[key] - before[key]
+                         for key in before}
+                disp[mode] = (delta["observe_all"] + delta["epoch_step"]
+                              + delta["reference"]) / n_epochs
+        for mode, wall in best.items():
+            entry[mode] = {
+                "wall_s": wall,
+                "s_per_epoch": wall / n_epochs,
+                "blocks_per_s": n * n_epochs / wall,
+                "dispatches_per_epoch": disp[mode],
+            }
+        entry["speedup"] = (entry["fused"]["blocks_per_s"]
+                            / entry["reference"]["blocks_per_s"])
+        if entry["fused"]["dispatches_per_epoch"] > 2:
+            ok_dispatches = False
+        report["sizes"].append(entry)
+        _row(f"epoch_runtime_bench_{n}", entry["fused"]["s_per_epoch"] * 1e6,
+             f"fused={entry['fused']['blocks_per_s']:.3g}blk/s "
+             f"ref={entry['reference']['blocks_per_s']:.3g}blk/s "
+             f"speedup={entry['speedup']:.2f}x "
+             f"dispatches={entry['fused']['dispatches_per_epoch']:.0f}/ep")
+    # only full scale updates the tracked cross-PR artifact; smoke runs (CI,
+    # local checks) write a scratch file so they can't clobber the recorded
+    # perf trajectory
+    out_path = dest / ("BENCH_epoch_runtime.json" if scale == "full"
+                       else "bench_epoch_runtime.smoke.json")
+    out_path.write_text(json.dumps(report, indent=1))
+    _row("epoch_runtime_bench_artifact", 0.0, str(out_path))
+    if not ok_dispatches:
+        print("FAIL: fused epoch loop exceeded 2 dispatches/epoch",
+              file=sys.stderr)
+        raise SystemExit(1)
 
 
 # =========================================================== telemetry sweep
@@ -208,12 +293,20 @@ ALL = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=list(ALL), default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="epoch_runtime: also benchmark fused vs reference "
+                         "and write results/BENCH_epoch_runtime.json")
+    ap.add_argument("--scale", choices=("smoke", "full"), default="full",
+                    help="benchmark sizes (smoke = CI fast suite)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in ALL.items():
         if args.only and name != args.only:
             continue
-        fn()
+        if name == "epoch_runtime":
+            fn(json_mode=args.json, scale=args.scale)
+        else:
+            fn()
 
 
 if __name__ == "__main__":

@@ -2,23 +2,28 @@
 
 Public surface:
   TieredStore           two-tier block store + indirection (blockstore.py)
+  Placement             the one bounded-fast-tier slot<->block substrate,
+                        lane-stackable and device-resident (placement.py)
   HMU / PEBS / NB       telemetry emulators over one access stream (telemetry.py)
   policies              oracle top-k, NB two-touch, reactive, proactive, hinted
+  selectk               O(n) exact top-k / rank kernels (no full sorts)
   MemSystem             two-tier analytic cost model (costmodel.py)
   TieringManager        Fig.2 "Tiering Agent" glue (manager.py)
   EpochRuntime          online observe->decide->migrate->account loop running
-                        all five policies over multi-epoch streams (runtime.py)
+                        all five policies in two jit dispatches per epoch
+                        (runtime.py; fused=False keeps the per-lane reference)
   metrics               accuracy / coverage / overlap / hotness CDF
 """
 from .blockstore import TieredStore
 from .costmodel import CXL_SYSTEM, TPU_V5E_SYSTEM, MemSystem, TierSpec
 from .manager import StrategyResult, TieringManager
+from .placement import Placement
 from .runtime import ALL_POLICIES, EpochRecord, EpochRuntime, Trajectory
-from . import metrics, policy, telemetry
+from . import metrics, placement, policy, selectk, telemetry
 
 __all__ = [
-    "TieredStore", "TieringManager", "StrategyResult",
+    "TieredStore", "TieringManager", "StrategyResult", "Placement",
     "EpochRuntime", "EpochRecord", "Trajectory", "ALL_POLICIES",
     "MemSystem", "TierSpec", "CXL_SYSTEM", "TPU_V5E_SYSTEM",
-    "metrics", "policy", "telemetry",
+    "metrics", "placement", "policy", "selectk", "telemetry",
 ]

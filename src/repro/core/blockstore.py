@@ -26,23 +26,37 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .placement import Placement
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class TieredStore:
-    """Two-tier row store with block-granular promotion."""
+    """Two-tier row store with block-granular promotion.
+
+    The indirection maps live in a :class:`~repro.core.placement.Placement`
+    — the same substrate the epoch runtime stacks per policy lane — so the
+    slot/block invariants are defined in exactly one place; the store adds
+    the payload bytes and their migration."""
 
     # (fast_rows + n_rows, dim): fast region followed by the slow backing region.
     storage: jax.Array
-    # (n_blocks,) int32: fast-slot id for each block, -1 if resident slow-only.
-    block_to_slot: jax.Array
-    # (n_slots,) int32: block id occupying each fast slot, -1 if free.
-    slot_to_block: jax.Array
+    # slot<->block indirection (slot_to_block: (n_slots,), block_to_slot:
+    # (n_blocks,), -1 = free / slow-only).
+    placement: Placement
     # static metadata
     block_rows: int = dataclasses.field(metadata=dict(static=True))
     n_rows: int = dataclasses.field(metadata=dict(static=True))
 
     # ------------------------------------------------------------------ sizes
+    @property
+    def block_to_slot(self) -> jax.Array:
+        return self.placement.block_to_slot
+
+    @property
+    def slot_to_block(self) -> jax.Array:
+        return self.placement.slot_to_block
+
     @property
     def n_blocks(self) -> int:
         return self.block_to_slot.shape[0]
@@ -73,8 +87,7 @@ class TieredStore:
         fast = jnp.zeros((n_slots * block_rows, dim), data.dtype)
         return TieredStore(
             storage=jnp.concatenate([fast, data], axis=0),
-            block_to_slot=jnp.full((n_blocks,), -1, jnp.int32),
-            slot_to_block=jnp.full((n_slots,), -1, jnp.int32),
+            placement=Placement.create(n_blocks, n_slots),
             block_rows=block_rows,
             n_rows=n_rows,
         )
@@ -190,7 +203,9 @@ def _promote(store: TieredStore, block_ids: jax.Array) -> TieredStore:
         return jax.lax.cond((slot >= 0) & fresh, do, lambda a: a, (storage, b2s, s2b))
 
     storage, b2s, s2b = jax.lax.fori_loop(0, block_ids.shape[0], body, (storage, b2s, s2b))
-    return dataclasses.replace(store, storage=storage, block_to_slot=b2s, slot_to_block=s2b)
+    return dataclasses.replace(
+        store, storage=storage,
+        placement=Placement(slot_to_block=s2b, block_to_slot=b2s))
 
 
 @partial(jax.jit, donate_argnums=0)
@@ -217,4 +232,6 @@ def _demote(store: TieredStore, block_ids: jax.Array) -> TieredStore:
     storage, b2s, s2b = jax.lax.fori_loop(
         0, block_ids.shape[0], body, (store.storage, store.block_to_slot, store.slot_to_block)
     )
-    return dataclasses.replace(store, storage=storage, block_to_slot=b2s, slot_to_block=s2b)
+    return dataclasses.replace(
+        store, storage=storage,
+        placement=Placement(slot_to_block=s2b, block_to_slot=b2s))

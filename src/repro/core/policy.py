@@ -68,18 +68,35 @@ def proactive_ewma(
     return pred, MigrationPlan(promote=jnp.where(vals > 0, ids, -1))
 
 
+def hinted_score(est_counts: jax.Array, t_rank: jax.Array,
+                 hint_rank: jax.Array, hint_weight: float) -> jax.Array:
+    """The hinted lane's blended score: telemetry rank mixed with the static
+    priority in rank space (so magnitudes are comparable), with blocks that
+    have neither telemetry nor a hint pushed to a -1 sentinel so they are
+    never promoted.  Shared by the eager :func:`hinted` policy and the fused
+    epoch step (which supplies ``t_rank`` from a sparse exact ranking) so
+    both paths select identical ids."""
+    n = est_counts.shape[0]
+    score = ((1.0 - hint_weight) * (t_rank / max(n - 1, 1))
+             + hint_weight * hint_rank)
+    eligible = (est_counts > 0) | (hint_rank > 0)
+    return jnp.where(eligible, score, -1.0)
+
+
 def hinted(
     est_counts: jax.Array, hint_rank: jax.Array, k: int, hint_weight: float = 0.25
 ) -> MigrationPlan:
     """Programmer/compiler hints (paper §VI): blend telemetry rank with a
-    static priority.  ``hint_rank`` in [0,1], larger = more important."""
+    static priority.  ``hint_rank`` in [0,1], larger = more important.
+    Blocks with zero telemetry *and* zero hint are masked out (score
+    sentinel -1) — like every other policy, untouched unhinted blocks are
+    never promoted just to fill k, which would churn migration traffic."""
     n = est_counts.shape[0]
-    # rank-space blend so magnitudes are comparable
-    t_rank = jnp.argsort(jnp.argsort(est_counts)) / max(n - 1, 1)
-    score = (1.0 - hint_weight) * t_rank + hint_weight * hint_rank
+    t_rank = jnp.argsort(jnp.argsort(est_counts))
+    score = hinted_score(est_counts, t_rank, hint_rank, hint_weight)
     k = min(k, n)
     vals, ids = jax.lax.top_k(score, k)
-    return MigrationPlan(promote=ids)
+    return MigrationPlan(promote=jnp.where(vals >= 0, ids, -1))
 
 
 def coldest_victims(est_counts: jax.Array, slot_to_block: jax.Array, n: int) -> jax.Array:

@@ -11,17 +11,26 @@ online regime: a loop over epochs in which
   2. **decide**   — every policy lane (five of them, one per §VI strategy)
      turns its collector's *epoch-local* estimate into a migration plan,
   3. **migrate**  — promotions are applied against a bounded fast tier;
-     when slots run out the lane demotes ``policy.coldest_victims`` first,
+     when slots run out the lane demotes plan-guarded coldest victims first,
   4. **account**  — the epoch is charged: modeled access time under the
      placement that actually *served* it (decided from data up to the
      previous epoch — no time travel), plus the collector's host tax and the
      epoch's migration traffic; accuracy/coverage are scored against the
      epoch's own true top-K.
 
-Per-epoch records form a trajectory (a time series, not a single end-state
-number) — the NeoMem / HybridTier evaluation regime, and what exposes the
-phase-shift behaviour: proactive/EWMA re-ranks within one epoch of a hot-set
-rotation while NB's cumulative two-touch signal keeps serving the stale set.
+**Dispatch accounting.**  Steps 2-4 are one jit'd ``_epoch_step`` that keeps
+every lane's placement state — a lane-stacked :class:`~repro.core.placement.
+Placement` plus the EWMA predictor — resident on device and ``vmap``s the
+policy/migration kernels over the lane axis, so a whole epoch is exactly
+**two dispatches** (``observe_all`` + ``epoch_step``; counted in
+:data:`DISPATCH_COUNTS`, traced-once proven via :data:`TRACE_COUNTS`) and
+only the scalar :class:`EpochRecord` fields cross the device boundary.
+Per-lane branching is a lane-config tuple (estimate source, selection
+threshold, move cap, hint weight) baked into the trace; top-k selection uses
+:mod:`~repro.core.selectk`'s O(n) kernels instead of full-length sorts.  The
+pre-refactor per-lane host loop (five policy lanes x several small jits +
+four full-array pulls per epoch) is preserved as ``fused=False`` — the
+bit-identity reference and the benchmark baseline.
 
 Policy lanes and their telemetry sources:
 
@@ -40,17 +49,21 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from functools import partial
+from typing import Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from . import metrics, policy
+from . import metrics, policy, selectk
 from . import telemetry as tel
 from .costmodel import CXL_SYSTEM, MemSystem, split_accesses_by_tier
+from .placement import Placement, apply_plan, demote_idle
 
 __all__ = [
-    "ALL_POLICIES", "EpochRecord", "EpochRuntime", "Trajectory",
+    "ALL_POLICIES", "DISPATCH_COUNTS", "TRACE_COUNTS",
+    "EpochRecord", "EpochRuntime", "Trajectory",
 ]
 
 ALL_POLICIES = (
@@ -64,6 +77,14 @@ ALL_POLICIES = (
 NB_FAULT_COST_S = 2e-6
 PEBS_SAMPLE_COST_S = 1.5e-6
 HMU_DRAIN_COST_S = 2e-9
+
+# Python-side counters.  TRACE_COUNTS ticks once per (shape, config) trace of
+# the fused step — tests prove the epoch loop compiles once.  DISPATCH_COUNTS
+# ticks per *call*: a fused epoch is exactly observe_all + epoch_step; the
+# reference path's count grows with every policy-lane jit/eager op and
+# full-array pull it issues.
+TRACE_COUNTS = {"epoch_step": 0}
+DISPATCH_COUNTS = {"observe_all": 0, "epoch_step": 0, "reference": 0}
 
 
 @dataclasses.dataclass
@@ -111,8 +132,8 @@ class Trajectory:
 
 @dataclasses.dataclass
 class _Lane:
-    """Per-policy placement state: a bounded fast tier's indirection maps
-    (same invariants as TieredStore's, without carrying the payload rows)."""
+    """Per-policy placement state of the *reference* path (host numpy maps;
+    the fused path holds the same state lane-stacked in a Placement)."""
     name: str
     slot_to_block: np.ndarray            # (k,) int32, -1 = free
     block_to_slot: np.ndarray            # (n_blocks,) int32, -1 = slow-only
@@ -135,6 +156,160 @@ def _unique_in_order(ids: np.ndarray, k: int) -> np.ndarray:
     return ids[np.sort(first)][:k]
 
 
+# ======================================================  fused device step
+class _FusedCfg(NamedTuple):
+    """Hashable static config baked into the epoch_step trace."""
+    lanes: Tuple[str, ...]
+    n_blocks: int
+    k_hot: int
+    ewma_alpha: float
+    hint_weight: float
+    nb_rate_limit: Optional[int]
+    reactive_hot_threshold: Optional[int]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class _FusedState:
+    """Everything the epoch loop mutates, resident on device between epochs."""
+    bundle: tel.TelemetryBundle
+    placement: Placement         # lane-stacked: (L, k_hot) / (L, n_blocks)
+    pred: jax.Array              # (n_blocks,) f32 EWMA (the proactive lane's)
+    hint_rank: jax.Array         # (n_blocks,) f32 static priorities
+    prev_hmu: jax.Array          # (n_blocks,) i32 epoch-delta baselines
+    prev_pebs: jax.Array
+
+
+@partial(jax.jit, static_argnames=("cfg", "s_max"), donate_argnums=0)
+def _epoch_step(state: _FusedState, epoch_accesses: jax.Array, *,
+                cfg: _FusedCfg, s_max: int):
+    """decide + migrate + account for every lane in ONE dispatch.
+
+    ``epoch_accesses`` is traced and ``s_max`` (the static PEBS-positives
+    bound) is quantized by the caller, so ragged epoch sizes share traces
+    instead of recompiling the five-lane program per unique size.  Returns
+    the next state plus the per-lane integer/scalar outputs the host needs
+    to assemble :class:`EpochRecord`s — nothing (n_blocks,)-sized ever
+    leaves the device.
+    """
+    TRACE_COUNTS["epoch_step"] += 1
+    lanes, n, k = cfg.lanes, cfg.n_blocks, cfg.k_hot
+    b = state.bundle
+
+    # -- drain the HMU log (host tax charged below from the drained count)
+    drained = b.hmu.log_used
+    bundle = dataclasses.replace(b, hmu=tel.hmu_drain_cost(b.hmu))
+
+    # -- epoch-local estimates (deltas against the previous epoch's totals).
+    #    The HMU counter is exact, so d_hmu *is* the epoch's ground truth
+    #    (bit-identical to d_true) — the oracle lane's selection doubles as
+    #    the epoch-hot set and true_counts never needs its own ranking.
+    true_now = b.true_counts
+    hmu_now = b.hmu.counts
+    pebs_now = b.pebs.sampled * b.pebs.period
+    d_hmu = hmu_now - state.prev_hmu
+    d_pebs = pebs_now - state.prev_pebs
+    nb_faults = b.nb.faults
+    d_hmu_f = d_hmu.astype(jnp.float32)
+
+    thr = (cfg.reactive_hot_threshold
+           if cfg.reactive_hot_threshold is not None
+           else jnp.maximum(2, epoch_accesses // (8 * max(k, 1))))
+
+    # -- per-lane selection keys (int32; floats via order-isomorphic bitcast),
+    #    eviction estimates, and selection gates: the lane-config arrays that
+    #    replace the per-lane Python branching.  Lanes that rank the same
+    #    signal (oracle + reactive + the epoch-hot set all rank d_hmu) share
+    #    one selection row.
+    rows: Dict[str, Tuple[jax.Array, jax.Array]] = {}
+
+    def row(rkey: str, key: jax.Array, est: jax.Array) -> int:
+        if rkey not in rows:
+            rows[rkey] = (key, est)
+        return list(rows).index(rkey)
+
+    hmu_row = row("hmu", d_hmu, d_hmu_f)
+    pred_new = state.pred
+    lane_row, min_keys, caps, is_reactive = [], [], [], []
+    for name in lanes:
+        if name == "hmu_oracle":
+            r, min_key, cap = hmu_row, 1, k
+        elif name == "nb_two_touch":
+            cap = k if cfg.nb_rate_limit is None else min(k, cfg.nb_rate_limit)
+            r, min_key = row("nb", nb_faults, nb_faults.astype(jnp.float32)), 2
+        elif name == "reactive_watermark":
+            r, min_key, cap = hmu_row, 0, k      # 0 = thr placeholder (traced)
+        elif name == "proactive_ewma":
+            pred_new = (cfg.ewma_alpha * d_hmu_f
+                        + (1.0 - cfg.ewma_alpha) * state.pred)
+            r = row("pred", selectk.sortable_key(pred_new), pred_new)
+            min_key, cap = 1, k
+        elif name == "hinted":
+            # exact argsort(argsort(d_pebs)): positives are bounded by this
+            # epoch's PEBS samples, so rank the sparse support only
+            t_rank = selectk.stable_rank_sparse(d_pebs, s_max)
+            score = policy.hinted_score(d_pebs, t_rank, state.hint_rank,
+                                        cfg.hint_weight)
+            r = row("score", selectk.sortable_key(score),
+                    d_pebs.astype(jnp.float32))
+            min_key, cap = 0, k
+        else:  # pragma: no cover - guarded in __init__
+            raise ValueError(name)
+        lane_row.append(r)
+        min_keys.append(min_key)
+        caps.append(cap)
+        is_reactive.append(name == "reactive_watermark")
+
+    key_rows = jnp.stack([kv[0] for kv in rows.values()])   # (U, n) int32
+    est_rows = jnp.stack([kv[1] for kv in rows.values()])   # (U, n) f32
+    lane_row = np.asarray(lane_row)
+    est_lanes = est_rows[lane_row]                          # (L, n) f32
+    reactive_arr = jnp.asarray(is_reactive)
+    min_key_arr = jnp.where(reactive_arr, thr,
+                            jnp.asarray(min_keys, jnp.int32))[:, None]
+    cap_arr = jnp.asarray(caps, jnp.int32)
+
+    # -- one O(n) selection per unique signal, fanned out to lanes
+    vals_u, ids_u, sel_u = selectk.select_top_k(key_rows, k, return_mask=True)
+    vals, ids = vals_u[lane_row], ids_u[lane_row]           # (L, k)
+
+    # -- account the epoch under the placement that served it (pre-migration)
+    hot = sel_u[hmu_row]                           # epoch's true top-K set
+    fast0 = state.placement.fast_mask              # (L, n)
+    n_fast = jnp.sum(jnp.where(fast0, d_hmu, 0), axis=-1)
+    n_slow = jnp.sum(d_hmu) - n_fast
+    inter = jnp.sum((fast0 & hot).astype(jnp.int32), axis=-1)
+    resident0 = state.placement.resident()
+
+    # -- decide: ordered top-k ids per lane, gated per lane config
+    pl, pre_demoted = demote_idle(state.placement, est_lanes,
+                                  reactive_arr[:, None])
+    free_slots = jnp.sum((pl.slot_to_block < 0).astype(jnp.int32), axis=-1)
+    cap_eff = jnp.where(reactive_arr, jnp.minimum(cap_arr, free_slots),
+                        cap_arr)
+    ok = (vals >= min_key_arr) & (jnp.arange(k, dtype=jnp.int32)[None, :]
+                                  < cap_eff[:, None])
+    want = jnp.where(ok, ids, -1)
+
+    # -- migrate: bounded promotion with plan-guarded coldest-victim eviction
+    pl, promoted, demoted = apply_plan(pl, want, est_lanes)
+
+    del true_now  # true_counts stays in the bundle; d_hmu already equals it
+    out = {
+        "drained": drained,
+        "pebs_host": bundle.pebs.host_events,
+        "nb_host": bundle.nb.host_events,
+        "n_fast": n_fast, "n_slow": n_slow,
+        "inter": inter, "resident": resident0,
+        "promoted": promoted, "demoted": demoted + pre_demoted,
+    }
+    state = _FusedState(
+        bundle=bundle, placement=pl, pred=pred_new,
+        hint_rank=state.hint_rank, prev_hmu=hmu_now, prev_pebs=pebs_now,
+    )
+    return state, out
+
+
 class EpochRuntime:
     """Runs all policy lanes over one shared telemetry stream, epoch by epoch.
 
@@ -142,6 +317,14 @@ class EpochRuntime:
     owns only its placement.  ``step`` consumes one epoch of equal-size
     batches ``(n_batches, batch_size)`` and returns that epoch's records;
     ``run`` drives a whole workload and returns the :class:`Trajectory`.
+
+    ``fused=True`` (default) keeps all lane state on device and executes
+    decide+migrate+account as the single ``_epoch_step`` dispatch;
+    ``fused=False`` is the pre-refactor per-lane host loop kept as the
+    bit-identity reference and benchmark baseline.  ``mesh`` (with a
+    ``NamedSharding`` axis named ``axis``) shards every (n_blocks,)-sized
+    array — collector histograms and lane placements — across devices for
+    paper-scale (5.24 M page) runs; see ``launch.mesh.make_telemetry_mesh``.
     """
 
     def __init__(
@@ -160,11 +343,18 @@ class EpochRuntime:
         hint_weight: float = 0.25,
         reactive_hot_threshold: Optional[int] = None,
         nb_rate_limit: Optional[int] = None,
+        fused: bool = True,
+        mesh=None,
+        mesh_axis: str = "blocks",
     ):
         unknown = set(policies) - set(ALL_POLICIES)
         if unknown:
             raise ValueError(f"unknown policies {sorted(unknown)}; "
                              f"choose from {ALL_POLICIES}")
+        if mesh is not None and not fused:
+            raise ValueError("mesh sharding requires the fused epoch step "
+                             "(the reference path keeps lane state on the "
+                             "host); pass fused=True or drop mesh")
         self.n_blocks = int(n_blocks)
         self.k_hot = min(int(k_hot), self.n_blocks)
         self.system = system
@@ -177,36 +367,79 @@ class EpochRuntime:
         self.hint_weight = float(hint_weight)
         self.reactive_hot_threshold = reactive_hot_threshold
         self.nb_rate_limit = nb_rate_limit
+        self.fused = bool(fused)
         scan = nb_scan_rate if nb_scan_rate is not None else max(n_blocks // 16, 1)
-        self.bundle = tel.bundle_init(
+        bundle = tel.bundle_init(
             n_blocks, pebs_period=pebs_period, nb_scan_rate=scan,
             hmu_log_capacity=hmu_log_capacity,
         )
-        self.lanes = {
-            name: _Lane(
-                name=name,
-                slot_to_block=np.full((self.k_hot,), -1, np.int32),
-                block_to_slot=np.full((self.n_blocks,), -1, np.int32),
-                pred=(np.zeros((self.n_blocks,), np.float32)
-                      if name == "proactive_ewma" else None),
-            )
-            for name in policies
-        }
+        self._lane_names = tuple(policies)
         self.epoch = 0
-        self.records: Dict[str, List[EpochRecord]] = {n: [] for n in self.lanes}
-        # epoch-delta baselines
-        self._prev_true = np.zeros((n_blocks,), np.int64)
-        self._prev_hmu = np.zeros((n_blocks,), np.int64)
-        self._prev_pebs = np.zeros((n_blocks,), np.int64)
+        self.records: Dict[str, List[EpochRecord]] = {n: [] for n in policies}
         self._prev_pebs_host = 0.0
         self._prev_nb_host = 0.0
+        if self.fused:
+            L = len(self._lane_names)
+            self._cfg = _FusedCfg(
+                lanes=self._lane_names, n_blocks=self.n_blocks,
+                k_hot=self.k_hot, ewma_alpha=self.ewma_alpha,
+                hint_weight=self.hint_weight,
+                nb_rate_limit=self.nb_rate_limit,
+                reactive_hot_threshold=self.reactive_hot_threshold,
+            )
+            def zeros_n():
+                # distinct buffers (not one shared array) so donation works
+                return jnp.zeros((self.n_blocks,), jnp.int32)
+
+            self._state = _FusedState(
+                bundle=bundle,
+                placement=Placement.create(self.n_blocks, self.k_hot, lanes=L),
+                pred=jnp.zeros((self.n_blocks,), jnp.float32),
+                hint_rank=jnp.asarray(self.hint_rank),
+                prev_hmu=zeros_n(), prev_pebs=zeros_n(),
+            )
+            if mesh is not None:
+                self._state = _shard_state(self._state, mesh, mesh_axis)
+        else:
+            self.bundle = bundle
+            self._ref_lanes = {
+                name: _Lane(
+                    name=name,
+                    slot_to_block=np.full((self.k_hot,), -1, np.int32),
+                    block_to_slot=np.full((self.n_blocks,), -1, np.int32),
+                    pred=(np.zeros((self.n_blocks,), np.float32)
+                          if name == "proactive_ewma" else None),
+                )
+                for name in policies
+            }
+            # epoch-delta baselines (host copies, like the PR-1 loop)
+            self._prev_true = np.zeros((n_blocks,), np.int64)
+            self._prev_hmu = np.zeros((n_blocks,), np.int64)
+            self._prev_pebs = np.zeros((n_blocks,), np.int64)
+
+    # ------------------------------------------------------- state accessors
+    @property
+    def lanes(self) -> Dict[str, _Lane]:
+        """Per-lane placement view (host copies in fused mode)."""
+        if not self.fused:
+            return self._ref_lanes
+        s2b = np.asarray(self._state.placement.slot_to_block)
+        b2s = np.asarray(self._state.placement.block_to_slot)
+        pred = np.asarray(self._state.pred)
+        return {
+            name: _Lane(
+                name=name, slot_to_block=s2b[i], block_to_slot=b2s[i],
+                pred=pred if name == "proactive_ewma" else None)
+            for i, name in enumerate(self._lane_names)
+        }
 
     # ------------------------------------------------------------- migrate
     def _apply_plan(self, lane: _Lane, plan: policy.MigrationPlan,
                     est: np.ndarray) -> Tuple[int, int]:
-        """Promote the plan into the lane's bounded fast tier; evict
-        ``coldest_victims`` when no slots are free.  Returns (promoted,
-        demoted) block counts — each is one block copy of migration traffic."""
+        """Reference path: promote the plan into the lane's bounded fast
+        tier; evict plan-guarded coldest victims when no slots are free.
+        Returns (promoted, demoted) block counts — each is one block copy of
+        migration traffic."""
         want = _unique_in_order(np.asarray(plan.promote), self.k_hot)
         if want.size == 0:
             return 0, 0
@@ -217,6 +450,7 @@ class EpochRuntime:
         demoted = 0
         need = new.size - free.size
         if need > 0:
+            DISPATCH_COUNTS["reference"] += 1
             vic = np.asarray(policy.plan_eviction(
                 jnp.asarray(est, jnp.float32), jnp.asarray(want),
                 jnp.asarray(lane.slot_to_block), int(need)))
@@ -249,9 +483,11 @@ class EpochRuntime:
     def _plan(self, lane: _Lane, d_hmu: np.ndarray, d_pebs: np.ndarray,
               nb_faults: np.ndarray, epoch_accesses: int,
               ) -> Tuple[policy.MigrationPlan, np.ndarray, int]:
-        """One lane's decide step -> (plan, estimate, pre-demotions)."""
+        """Reference path: one lane's decide step -> (plan, estimate,
+        pre-demotions)."""
         k = self.k_hot
         pre_demoted = 0
+        DISPATCH_COUNTS["reference"] += 1
         if lane.name == "hmu_oracle":
             est = d_hmu
             plan = policy.oracle_top_k(jnp.asarray(est, jnp.int32), k)
@@ -291,15 +527,84 @@ class EpochRuntime:
         batches = np.ascontiguousarray(np.asarray(batches, np.int32))
         if batches.ndim != 2:
             raise ValueError(f"epoch batches must be 2-D, got {batches.shape}")
+        if self.fused:
+            return self._step_fused(batches)
+        return self._step_reference(batches)
+
+    def _record(self, name: str, n_fast: float, n_slow: float,
+                host_events: float, promoted: int, demoted: int,
+                resident: int, inter: int) -> EpochRecord:
+        """Shared epoch accounting (host float64 scalar math, both paths)."""
+        access_s = self.system.access_time_s(
+            n_fast, n_slow, self.bytes_per_access)
+        per_event = (NB_FAULT_COST_S if name == "nb_two_touch" else
+                     PEBS_SAMPLE_COST_S if name == "hinted" else
+                     HMU_DRAIN_COST_S)
+        host_tax_s = host_events * per_event
+        migration_s = self.system.migration_time_s(
+            promoted + demoted, self.block_bytes)
+        return EpochRecord(
+            epoch=self.epoch, lane=name,
+            time_s=access_s + host_tax_s + migration_s,
+            access_s=access_s, host_tax_s=host_tax_s, migration_s=migration_s,
+            accuracy=(inter / resident) if resident else 0.0,
+            coverage=(inter / self.k_hot) if self.k_hot else 0.0,
+            resident=resident, promoted=promoted, demoted=demoted,
+            host_events=host_events,
+        )
+
+    def _step_fused(self, batches: np.ndarray) -> Dict[str, EpochRecord]:
+        state = self._state
+        DISPATCH_COUNTS["observe_all"] += 1
+        bundle = tel.observe_all(state.bundle, jnp.asarray(batches))
+        state = dataclasses.replace(state, bundle=bundle)
+        # static PEBS-positives bound, quantized to the next power of two so
+        # ragged epoch sizes don't retrace the epoch program
+        bound = int(batches.size) // state.bundle.pebs.period + 2
+        s_max = min(self.n_blocks, 1 << (bound - 1).bit_length())
+        DISPATCH_COUNTS["epoch_step"] += 1
+        self._state, dev = _epoch_step(
+            state, jnp.asarray(batches.size, jnp.int32),
+            cfg=self._cfg, s_max=s_max)
+        out_host = jax.device_get(dev)           # the only per-epoch sync
+        pebs_host = float(out_host["pebs_host"])
+        nb_host = float(out_host["nb_host"])
+        d_pebs_host = pebs_host - self._prev_pebs_host
+        d_nb_host = nb_host - self._prev_nb_host
+        self._prev_pebs_host, self._prev_nb_host = pebs_host, nb_host
+        drained = float(out_host["drained"])
+
+        out: Dict[str, EpochRecord] = {}
+        for i, name in enumerate(self._lane_names):
+            host_events = (d_nb_host if name == "nb_two_touch" else
+                           d_pebs_host if name == "hinted" else drained)
+            rec = self._record(
+                name,
+                n_fast=float(out_host["n_fast"][i]),
+                n_slow=float(out_host["n_slow"][i]),
+                host_events=host_events,
+                promoted=int(out_host["promoted"][i]),
+                demoted=int(out_host["demoted"][i]),
+                resident=int(out_host["resident"][i]),
+                inter=int(out_host["inter"][i]),
+            )
+            self.records[name].append(rec)
+            out[name] = rec
+        self.epoch += 1
+        return out
+
+    def _step_reference(self, batches: np.ndarray) -> Dict[str, EpochRecord]:
         epoch_accesses = int(batches.size)
 
         # -- observe (one dispatch) + drain the HMU log
+        DISPATCH_COUNTS["observe_all"] += 1
         self.bundle = tel.observe_all(self.bundle, jnp.asarray(batches))
         drained = float(self.bundle.hmu.log_used)
         self.bundle = dataclasses.replace(
             self.bundle, hmu=tel.hmu_drain_cost(self.bundle.hmu))
 
-        # -- epoch-local estimates
+        # -- epoch-local estimates (four full-array pulls per epoch)
+        DISPATCH_COUNTS["reference"] += 4
         true_now = np.asarray(self.bundle.true_counts, np.int64)
         hmu_now = np.asarray(tel.hmu_estimate(self.bundle.hmu), np.int64)
         pebs_now = np.asarray(tel.pebs_estimate(self.bundle.pebs), np.int64)
@@ -316,37 +621,23 @@ class EpochRuntime:
 
         epoch_hot = metrics.true_top_k(d_true, self.k_hot)
         out: Dict[str, EpochRecord] = {}
-        for lane in self.lanes.values():
+        for lane in self._ref_lanes.values():
             # -- account the epoch under the placement that served it
             served = lane.resident_ids().copy()
             n_fast, n_slow = split_accesses_by_tier(d_true, lane.fast_mask)
-            access_s = self.system.access_time_s(
-                n_fast, n_slow, self.bytes_per_access)
-            if lane.name == "nb_two_touch":
-                host_events, per_event = d_nb_host, NB_FAULT_COST_S
-            elif lane.name == "hinted":
-                host_events, per_event = d_pebs_host, PEBS_SAMPLE_COST_S
-            else:
-                host_events, per_event = drained, HMU_DRAIN_COST_S
-            host_tax_s = host_events * per_event
+            host_events = (d_nb_host if lane.name == "nb_two_touch" else
+                           d_pebs_host if lane.name == "hinted" else drained)
 
             # -- decide + migrate for the NEXT epoch
             plan, est, pre_demoted = self._plan(
                 lane, d_hmu, d_pebs, nb_faults, epoch_accesses)
             promoted, demoted = self._apply_plan(lane, plan, est)
-            demoted += pre_demoted
-            migration_s = self.system.migration_time_s(
-                promoted + demoted, self.block_bytes)
-
-            rec = EpochRecord(
-                epoch=self.epoch, lane=lane.name,
-                time_s=access_s + host_tax_s + migration_s,
-                access_s=access_s, host_tax_s=host_tax_s,
-                migration_s=migration_s,
-                accuracy=metrics.accuracy(served, epoch_hot),
-                coverage=metrics.coverage(served, epoch_hot, self.k_hot),
-                resident=int(served.size), promoted=promoted, demoted=demoted,
-                host_events=host_events,
+            inter = int(np.intersect1d(served, epoch_hot).size)
+            rec = self._record(
+                lane.name, n_fast=n_fast, n_slow=n_slow,
+                host_events=host_events, promoted=promoted,
+                demoted=demoted + pre_demoted,
+                resident=int(served.size), inter=inter,
             )
             self.records[lane.name].append(rec)
             out[lane.name] = rec
@@ -362,3 +653,22 @@ class EpochRuntime:
     def trajectory(self) -> Trajectory:
         return Trajectory(n_blocks=self.n_blocks, k_hot=self.k_hot,
                           records=self.records)
+
+
+def _shard_state(state: _FusedState, mesh, axis: str) -> _FusedState:
+    """Distribute every (n_blocks,)-sized leaf (collector histograms, lane
+    placements, EWMA state) over ``mesh``'s ``axis``; scalars and slot maps
+    are replicated.  jit then partitions observe_all and epoch_step via
+    GSPMD — the decision loop runs where the counters live."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    n_blocks = state.bundle.true_counts.shape[0]
+
+    def put(x):
+        if getattr(x, "ndim", 0) >= 1 and x.shape[-1] == n_blocks:
+            spec = P(*([None] * (x.ndim - 1) + [axis]))
+        else:
+            spec = P()
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(put, state)

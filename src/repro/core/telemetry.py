@@ -111,7 +111,7 @@ def hmu_drain_cost(state: HMUState, per_record_cost: float = 1.0) -> HMUState:
 @dataclasses.dataclass(frozen=True)
 class PEBSState:
     sampled: jax.Array        # (n_blocks,) number of *sampled* hits per block
-    cursor: jax.Array         # scalar: global access index mod period
+    cursor: jax.Array         # scalar int32: global access index mod period
     period: int = dataclasses.field(metadata=dict(static=True))
     host_events: jax.Array    # scalar: one per PEBS record (interrupt+parse)
 
@@ -119,7 +119,7 @@ class PEBSState:
 def pebs_init(n_blocks: int, period: int = 10007) -> PEBSState:
     return PEBSState(
         sampled=jnp.zeros((n_blocks,), jnp.int32),
-        cursor=jnp.zeros((), jnp.float32),
+        cursor=jnp.zeros((), jnp.int32),
         period=int(period),
         host_events=jnp.zeros((), jnp.float32),
     )
@@ -128,16 +128,17 @@ def pebs_init(n_blocks: int, period: int = 10007) -> PEBSState:
 def _pebs_observe(state: PEBSState, block_ids: jax.Array) -> PEBSState:
     flat = block_ids.reshape(-1)
     n = flat.shape[0]
-    # cursor is float32 for range; exact for streams < 2^24 per phase window.
-    start = state.cursor.astype(jnp.int32) % state.period
-    idx = start + jnp.arange(n, dtype=jnp.int32)
+    # cursor is an exact int32 carried modulo period: a float32 cursor is only
+    # exact for streams < 2^24 accesses, so paper-scale epoch streams would
+    # drift the sampling phase.  The modulo keeps it exact forever.
+    idx = state.cursor + jnp.arange(n, dtype=jnp.int32)
     hit = (idx % state.period) == 0
     # scatter-add only sampled positions (weight 0/1)
     sampled = state.sampled.at[flat].add(hit.astype(jnp.int32), mode="drop")
     return dataclasses.replace(
         state,
         sampled=sampled,
-        cursor=state.cursor + n,
+        cursor=(state.cursor + n) % state.period,
         host_events=state.host_events + jnp.sum(hit).astype(jnp.float32),
     )
 

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from .blockstore import TieredStore
+from . import placement as placement_lib
 from . import policy as policy_lib
 from .costmodel import MemSystem, TPU_V5E_SYSTEM
 
@@ -99,18 +100,11 @@ class TieredEmbedding:
         self._last_counts = self.counts.copy()
 
         # Explicit demotion: when promotions exceed free slots, evict the
-        # epoch-coldest residents (never blocks the plan still wants).
-        want = np.asarray(plan.promote).reshape(-1)
-        want = want[want >= 0]
-        b2s = np.asarray(self.store.block_to_slot)
-        n_new = int(np.sum(b2s[want] < 0)) if want.size else 0
-        free = k - int(self.store.fast_occupancy())
-        need = n_new - free
-        victims = None
-        if need > 0:
-            victims = policy_lib.plan_eviction(
-                jnp.asarray(delta.astype(np.float32)), jnp.asarray(want),
-                self.store.slot_to_block, int(need))
+        # epoch-coldest residents (never blocks the plan still wants).  The
+        # bounded-promotion invariant lives in core.placement — the same
+        # sequence the fused EpochRuntime applies lane-stacked on device.
+        _, victims = placement_lib.plan_promotion(
+            self.store.placement, plan.promote, delta)
         before = int(self.store.fast_occupancy())
         self.store = self.store.migrate(plan.promote, victims)
         return int(self.store.fast_occupancy()) - before + (

@@ -329,10 +329,17 @@ def run_online(
     pebs_period: int = 401,
     rotate_by: Optional[int] = None,
     seed: int = 0,
+    fused: bool = True,
+    mesh=None,
 ) -> dict:
     """§VI online regime: multi-epoch phase-shifting DLRM trace through the
     EpochRuntime.  The hot set rotates at ``shift_at``; the trajectory shows
     which telemetry/policy pairs re-converge and which collapse (NB).
+
+    ``fused`` selects the device-resident two-dispatch epoch loop (default)
+    or the per-lane reference path; ``mesh`` (see
+    ``launch.mesh.make_telemetry_mesh``) shards all per-page state across
+    devices for paper-scale (5.24 M page) trajectories.
 
     Returns ``{"trajectory": per-epoch dict, "summary": headline numbers}``.
     """
@@ -344,6 +351,7 @@ def run_online(
         block_bytes=float(spec.page_bytes),
         pebs_period=pebs_period,
         nb_scan_rate=max(n_pages // batches_per_epoch, 1),
+        fused=fused, mesh=mesh,
     )
     traj = rt.run(datagen.phase_shift_epochs(
         spec, n_epochs=n_epochs, batches_per_epoch=batches_per_epoch,

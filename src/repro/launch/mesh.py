@@ -25,6 +25,15 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def make_telemetry_mesh(n_devices: int | None = None, axis: str = "blocks"):
+    """1-D mesh for memory-side telemetry: per-block state (collector
+    histograms, lane placements) shards over ``axis`` so paper-scale
+    (5.24 M page) epoch runs keep the decision loop next to the counters.
+    Defaults to all visible devices."""
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return jax.make_mesh((n,), (axis,))
+
+
 def use_mesh(mesh):
     """Ambient-mesh context, portable across jax versions: ``jax.set_mesh``
     where it exists (>= 0.6), else the Mesh object itself (a context manager

@@ -1,18 +1,38 @@
 """Epoch-driven runtime tests: the fused observe_all path is bit-identical to
-the per-batch path and issues one jit dispatch per epoch; on the phase-shift
-workload proactive/EWMA over HMU counts beats NB two-touch on modeled time in
-every post-shift epoch (the ISSUE's acceptance criteria)."""
+the per-batch path and issues one jit dispatch per epoch; the fused
+device-resident epoch_step is bit-identical to the per-lane reference path
+and holds a whole epoch to two dispatches; sharded state matches
+single-device; on the phase-shift workload proactive/EWMA over HMU counts
+beats NB two-touch on modeled time in every post-shift epoch."""
 import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.core import runtime as rtmod
 from repro.core import telemetry as tel
 from repro.core.manager import TieringManager
 from repro.core.runtime import ALL_POLICIES, EpochRuntime
 from repro.dlrm import datagen
+
+REPO = Path(__file__).resolve().parent.parent
+SUBPROC_ENV = dict(os.environ, PYTHONPATH=str(REPO / "src"),
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8",
+                   JAX_PLATFORMS="cpu")
+
+
+def run_py(code: str, timeout=480):
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=SUBPROC_ENV,
+                          timeout=timeout, cwd=REPO)
 
 
 # ------------------------------------------------------------- fused observe
@@ -134,6 +154,150 @@ def test_trajectory_json_roundtrip():
     rec = data["lanes"]["hmu_oracle"][0]
     assert {"epoch", "time_s", "accuracy", "coverage",
             "promoted", "demoted"} <= set(rec)
+
+
+# ------------------------------------------------- fused multi-lane step
+def _phase_shift_run(fused: bool, spec, n_epochs=6, batches_per_epoch=3,
+                     shift_at=3, **kw):
+    n = spec.n_pages
+    rt = EpochRuntime(n, fused=fused, policies=ALL_POLICIES,
+                      bytes_per_access=spec.row_bytes,
+                      block_bytes=spec.page_bytes, **kw)
+    traj = rt.run(datagen.phase_shift_epochs(
+        spec, n_epochs=n_epochs, batches_per_epoch=batches_per_epoch,
+        shift_at=shift_at, rotate_by=n // 2, seed=0))
+    return rt, traj
+
+
+def test_fused_step_bit_identical_to_reference_path():
+    """Tentpole acceptance: every EpochRecord field of every lane and epoch
+    from the device-resident fused step equals the per-lane reference path
+    bit for bit on a phase-shift workload, including the final placements."""
+    spec = dataclasses.replace(datagen.SMALL, lookups_per_batch=20_000)
+    kw = dict(k_hot=250, pebs_period=401, nb_scan_rate=spec.n_pages // 4)
+    rt_f, tf = _phase_shift_run(True, spec, **kw)
+    rt_r, tr = _phase_shift_run(False, spec, **kw)
+    for lane in ALL_POLICIES:
+        ra, rb = tf.lane(lane), tr.lane(lane)
+        assert len(ra) == len(rb) == 6
+        for a, b in zip(ra, rb):
+            assert a.to_dict() == b.to_dict(), (lane, a.epoch)
+    lanes_f, lanes_r = rt_f.lanes, rt_r.lanes
+    for name in ALL_POLICIES:
+        np.testing.assert_array_equal(lanes_f[name].slot_to_block,
+                                      lanes_r[name].slot_to_block)
+        np.testing.assert_array_equal(lanes_f[name].block_to_slot,
+                                      lanes_r[name].block_to_slot)
+
+
+def test_fused_step_bit_identical_with_hints_and_rate_limit():
+    """Same bit-identity under the non-default lane configs: static hints
+    feeding the hinted lane and an NB promotion rate limit."""
+    spec = dataclasses.replace(datagen.SMALL, lookups_per_batch=10_000)
+    rng = np.random.default_rng(7)
+    hints = (rng.random(spec.n_pages) * (rng.random(spec.n_pages) < 0.1)
+             ).astype(np.float32)
+    kw = dict(k_hot=200, pebs_period=211, nb_scan_rate=spec.n_pages // 3,
+              hint_rank=hints, hint_weight=0.4, nb_rate_limit=37,
+              ewma_alpha=0.3)
+    _, tf = _phase_shift_run(True, spec, **kw)
+    _, tr = _phase_shift_run(False, spec, **kw)
+    for lane in ALL_POLICIES:
+        for a, b in zip(tf.lane(lane), tr.lane(lane)):
+            assert a.to_dict() == b.to_dict(), (lane, a.epoch)
+
+
+def test_fused_epoch_is_two_dispatches_and_one_trace():
+    """Acceptance: one epoch of all five lanes = observe_all + epoch_step
+    (two dispatches), nothing from the per-lane reference machinery, and
+    equal-shaped epochs re-use one epoch_step trace."""
+    n = 512
+    rt = EpochRuntime(n, 64, policies=ALL_POLICIES, pebs_period=97,
+                      nb_scan_rate=128)
+    rng = np.random.default_rng(0)
+    rt.step(rng.integers(0, n, (3, 1000)).astype(np.int32))  # warm the trace
+    before = {**rtmod.DISPATCH_COUNTS}
+    traces_before = rtmod.TRACE_COUNTS["epoch_step"]
+    for _ in range(3):
+        rt.step(rng.integers(0, n, (3, 1000)).astype(np.int32))
+    delta = {k: rtmod.DISPATCH_COUNTS[k] - before[k]
+             for k in rtmod.DISPATCH_COUNTS}
+    assert delta == {"observe_all": 3, "epoch_step": 3, "reference": 0}
+    assert rtmod.TRACE_COUNTS["epoch_step"] == traces_before  # no re-trace
+
+
+def test_fused_runtime_lane_views_keep_invariants():
+    n, k = 600, 60
+    rt = EpochRuntime(n, k, policies=ALL_POLICIES, pebs_period=101,
+                      nb_scan_rate=150)
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        rt.step(rng.integers(0, n, (2, 5000)).astype(np.int32))
+    for name, lane in rt.lanes.items():
+        s2b, b2s = lane.slot_to_block, lane.block_to_slot
+        assert (s2b >= 0).sum() == (b2s >= 0).sum() <= k
+        for slot, blk in enumerate(s2b):
+            if blk >= 0:
+                assert b2s[blk] == slot, name
+    assert rt.lanes["proactive_ewma"].pred is not None
+    assert rt.lanes["hmu_oracle"].pred is None
+
+
+@pytest.mark.slow
+def test_sharded_observe_all_and_epoch_step_parity():
+    """Tentpole acceptance: trajectories with all per-block state sharded
+    over an 8-device mesh equal the single-device run exactly (subprocess:
+    device count must be set before jax initializes)."""
+    r = run_py("""
+        import dataclasses, json
+        from repro.dlrm import datagen, tracesim
+        from repro.launch.mesh import make_telemetry_mesh, use_mesh
+
+        spec = dataclasses.replace(datagen.SMALL, lookups_per_batch=8_000)
+        kw = dict(spec=spec, n_epochs=4, batches_per_epoch=2, shift_at=2,
+                  seed=0)
+        ref = tracesim.run_online(**kw)
+        mesh = make_telemetry_mesh(8)
+        with use_mesh(mesh):
+            shd = tracesim.run_online(mesh=mesh, **kw)
+        assert json.dumps(ref["trajectory"], sort_keys=True) == \\
+            json.dumps(shd["trajectory"], sort_keys=True)
+        print("OK")
+    """)
+    assert "OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+
+
+@pytest.mark.slow
+def test_paper_scale_sharded_online_run():
+    """§VI at paper scale: a 5.24M-page phase-shift trajectory with sharded
+    telemetry + lane state completes and produces sane records."""
+    r = run_py("""
+        import dataclasses
+        from repro.dlrm import datagen, tracesim
+        from repro.launch.mesh import make_telemetry_mesh, use_mesh
+
+        spec = datagen.DLRMTraceSpec(n_params=5_368_709_120,
+                                     lookups_per_batch=400_000)
+        assert spec.n_pages == 5_242_880
+        mesh = make_telemetry_mesh(8)
+        with use_mesh(mesh):
+            out = tracesim.run_online(
+                spec=spec, mesh=mesh, n_epochs=3, batches_per_epoch=2,
+                shift_at=2, k_hot=spec.n_pages // 64, seed=0)
+        lanes = out["trajectory"]["lanes"]
+        assert set(lanes) == set(%r)
+        for recs in lanes.values():
+            assert len(recs) == 3
+            assert all(r["time_s"] > 0 for r in recs)
+        # after one epoch the lanes lock on: the sparse stream leaves the
+        # tail of the top-k tie-dominated (count-1 pages), so the threshold-
+        # gated lanes show precision where the full-k oracle is diluted
+        assert lanes["hmu_oracle"][1]["accuracy"] > 0.3
+        assert lanes["reactive_watermark"][1]["accuracy"] > 0.6
+        assert lanes["hinted"][1]["accuracy"] > 0.6
+        print("OK")
+    """ % (list(ALL_POLICIES),))
+    assert "OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
 
 
 # ------------------------------------------------- phase-shift acceptance

@@ -24,8 +24,29 @@ def test_pebs_cursor_continues_across_batch_boundaries():
 
     np.testing.assert_array_equal(np.asarray(one.sampled),
                                   np.asarray(chopped.sampled))
-    assert float(one.cursor) == float(chopped.cursor) == 305.0
+    # the cursor is an exact int32 carried modulo the period (a float cursor
+    # drifts once the stream passes 2^24 accesses)
+    assert int(one.cursor) == int(chopped.cursor) == 305 % period
+    assert one.cursor.dtype == np.int32
     assert float(one.host_events) == float(chopped.host_events)
+
+
+def test_pebs_cursor_phase_exact_beyond_float32_range():
+    """A float32 cursor is only exact below 2^24; the int32 modulo cursor
+    keeps the sampling phase exact for arbitrarily long streams.  Simulate a
+    long-run state directly (cursor mid-phase, as after ~2^24 accesses) and
+    check the next sample lands exactly on the period boundary."""
+    period = 10_007
+    st = tel.pebs_init(50, period=period)
+    # as-if 2^24 + 3 accesses already observed: phase = (2**24 + 3) % period
+    import dataclasses
+    st = dataclasses.replace(
+        st, cursor=jnp.asarray((2 ** 24 + 3) % period, jnp.int32))
+    gap = period - int(st.cursor)            # accesses until the next sample
+    st = tel.pebs_observe(st, jnp.zeros((gap + 1,), jnp.int32))
+    assert int(np.asarray(st.sampled)[0]) == 1   # sampled exactly once
+    assert int(st.cursor) == 1
+    assert 0 <= int(st.cursor) < period
 
 
 def test_pebs_samples_exactly_every_period_positions():
