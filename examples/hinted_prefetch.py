@@ -1,0 +1,63 @@
+"""Hinted vs lookahead-prefetch tiering on a phase-shifting DLRM trace.
+
+The paper's §VI triad is reactive placement, proactive movement, and
+*compiler hints*.  This walkthrough runs the online EpochRuntime with the
+`repro.hints` pipeline attached and compares the two hint-fed lanes:
+
+* ``hinted``   — PEBS telemetry blended with *static* hints from the
+  embedding-table structure (Zipf prior + the compiler's rank->page layout).
+  Exact before the hot set rotates; stale after — the EWMA phase-change
+  detector then down-weights it.
+* ``prefetch`` — *lookahead* hints: the dataloader's queued next-epoch
+  batches, promoted before the accesses land.  Covers the rotation in the
+  very epoch it happens, and its migration streams under the access stream
+  (overlap-aware accounting, `MemSystem.overlapped_epoch_time_s`).
+
+    PYTHONPATH=src python examples/hinted_prefetch.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.dlrm import datagen, tracesim
+
+SPEC = datagen.SMALL
+N_EPOCHS, SHIFT_AT = 8, 4
+
+# ---- one trajectory, hints on: static + lookahead + phase detector
+out = tracesim.run_online(spec=SPEC, n_epochs=N_EPOCHS, shift_at=SHIFT_AT,
+                          hints=True, seed=0)
+lanes = out["trajectory"]["lanes"]
+
+print(f"phase-shift trace: {SPEC.n_pages} pages, hot set rotates at epoch "
+      f"{SHIFT_AT}\n")
+print(f"{'epoch':>5s} {'hinted cov':>11s} {'prefetch cov':>13s} "
+      f"{'prefetch hidden':>16s}")
+for e in range(N_EPOCHS):
+    h, p = lanes["hinted"][e], lanes["prefetch"][e]
+    marker = "  <- shift" if e == SHIFT_AT else ""
+    print(f"{e:>5d} {h['coverage']:>11.2f} {p['coverage']:>13.2f} "
+          f"{p['hidden_s']*1e6:>14.1f}us{marker}")
+
+s = out["summary"]
+print(f"\npost-shift mean coverage: hinted "
+      f"{s['hinted']['post_shift_mean_coverage']:.2f} vs prefetch "
+      f"{s['prefetch']['post_shift_mean_coverage']:.2f} "
+      f"(lookahead sees the rotation in the epoch it happens; the static "
+      f"table prior goes stale)")
+
+# ---- overlap-aware migration accounting: same lane, overlap on vs off
+times = {}
+for overlap in (1.0, 0.0):
+    r = tracesim.run_online(spec=SPEC, n_epochs=N_EPOCHS, shift_at=SHIFT_AT,
+                            hints=True, prefetch_overlap=overlap, seed=0)
+    times[overlap] = np.array(
+        [rec["time_s"] for rec in r["trajectory"]["lanes"]["prefetch"]])
+assert (times[1.0] <= times[0.0]).all()
+saved = (times[0.0] - times[1.0]).sum()
+print(f"\noverlapped migration saves {saved*1e6:.0f}us over the trajectory "
+      f"({(times[0.0].sum() / times[1.0].sum() - 1) * 100:.1f}% of epoch "
+      f"time vs stop-the-world migration) ✓")

@@ -21,6 +21,13 @@ from __future__ import annotations
 import dataclasses
 
 
+def _check_overlap(overlap: float) -> None:
+    """Overlap fractions are physical ratios: anything outside [0,1] (or NaN)
+    is a caller bug, not a clampable input."""
+    if not 0.0 <= float(overlap) <= 1.0:
+        raise ValueError(f"overlap must be in [0, 1], got {overlap!r}")
+
+
 @dataclasses.dataclass(frozen=True)
 class TierSpec:
     name: str
@@ -46,8 +53,10 @@ class MemSystem:
         bytes_per_access: float,
         overlap: float = 0.0,
     ) -> float:
-        """Time to service the access mix.  ``overlap`` in [0,1): fraction of
-        slow-tier time hidden under fast-tier time (prefetch/NMC overlap)."""
+        """Time to service the access mix.  ``overlap`` in [0,1]: fraction of
+        slow-tier time hidden under concurrent work (prefetch/NMC overlap);
+        0 is the serial sum of the tiers, 1 hides all slow-tier time."""
+        _check_overlap(overlap)
         tf = self.tier_time_s(n_fast, n_fast * bytes_per_access, self.fast)
         ts = self.tier_time_s(n_slow, n_slow * bytes_per_access, self.slow)
         return tf + ts * (1.0 - overlap)
@@ -55,6 +64,47 @@ class MemSystem:
     def migration_time_s(self, n_blocks: float, block_bytes: float) -> float:
         """Block migration: read from slow + write to fast (slow side bounds)."""
         return self.tier_time_s(n_blocks, n_blocks * block_bytes, self.slow)
+
+    def migration_overlap_s(
+        self,
+        n_slow: float,
+        bytes_per_access: float,
+        n_blocks: float,
+        block_bytes: float,
+        overlap: float = 1.0,
+    ) -> float:
+        """Seconds of epoch time hidden when ``n_blocks`` of migration stream
+        concurrently with the epoch's accesses (lookahead prefetch): the
+        overlapped fraction of whichever leg is shorter — the slow-tier access
+        time or the migration DMA — hides under the other.  0 at
+        ``overlap=0`` (stop-the-world migration), ``min(ts, mig)`` at 1."""
+        _check_overlap(overlap)
+        ts = self.tier_time_s(n_slow, n_slow * bytes_per_access, self.slow)
+        mig = self.migration_time_s(n_blocks, block_bytes)
+        return overlap * min(ts, mig)
+
+    def overlapped_epoch_time_s(
+        self,
+        n_fast: float,
+        n_slow: float,
+        bytes_per_access: float,
+        n_blocks: float,
+        block_bytes: float,
+        overlap: float = 1.0,
+    ) -> float:
+        """Epoch time when the boundary migration overlaps the epoch's access
+        stream instead of serializing ahead of it.  The hidden share of the
+        slow-tier access time folds out through the ``access_time_s(overlap=)``
+        hook, so the total is the serial sum minus ``migration_overlap_s``:
+        never more than stop-the-world migration, never less than the longer
+        of the two legs."""
+        hidden = self.migration_overlap_s(
+            n_slow, bytes_per_access, n_blocks, block_bytes, overlap)
+        ts = self.tier_time_s(n_slow, n_slow * bytes_per_access, self.slow)
+        eff = hidden / ts if ts > 0.0 else 0.0
+        return (self.access_time_s(n_fast, n_slow, bytes_per_access,
+                                   overlap=eff)
+                + self.migration_time_s(n_blocks, block_bytes))
 
 
 # The paper's platform: Intel Emerald Rapids (DDR5) + FPGA CXL type-3 card.

@@ -153,14 +153,7 @@ def apply_plan(p: Placement, want: jax.Array, est: jax.Array,
     n_free = cfree[..., -1:]
     new_rank = jnp.cumsum(new.astype(jnp.int32), axis=-1) - 1
     assign = new & (new_rank < n_free)
-    targets = jnp.arange(1, k + 1, dtype=jnp.int32)
-
-    def jth_free(cf):
-        return jnp.searchsorted(cf, targets, side="left").astype(jnp.int32)
-
-    for _ in range(s2b.ndim - 1):
-        jth_free = jax.vmap(jth_free)
-    free_slot = jth_free(cfree)                     # (..., k), fill -> k
+    free_slot = selectk.compact(cfree, k)           # (..., k), fill -> k
     slot_for = jnp.take_along_axis(
         free_slot, jnp.clip(new_rank, 0, k - 1), axis=-1)
     s2b = _scatter_ids(s2b, slot_for, assign, want)

@@ -99,6 +99,17 @@ def hinted(
     return MigrationPlan(promote=jnp.where(vals >= 0, ids, -1))
 
 
+def prefetch(lookahead_rank: jax.Array, k: int) -> MigrationPlan:
+    """Lookahead prefetch (paper §VI: proactive movement driven by compiler
+    hints): promote the blocks a bounded lookahead window says the *next*
+    epoch will touch, heaviest first, before the accesses land.
+    ``lookahead_rank`` in [0,1]; blocks outside the window (rank 0) are never
+    promoted — an empty window is a no-op, not a churn source."""
+    k = min(k, lookahead_rank.shape[0])
+    vals, ids = jax.lax.top_k(lookahead_rank, k)
+    return MigrationPlan(promote=jnp.where(vals > 0, ids, -1))
+
+
 def coldest_victims(est_counts: jax.Array, slot_to_block: jax.Array, n: int) -> jax.Array:
     """Pick the n coldest currently-fast blocks as demotion victims."""
     occ = slot_to_block >= 0

@@ -43,12 +43,29 @@ reactive_watermark HMU epoch-delta counts     log drain
 proactive_ewma     EWMA of HMU epoch deltas   log drain
 hinted             PEBS epoch-delta estimate  PEBS samples (~1.5 us each)
                    blended with static hints
+prefetch           lookahead window over the  none (compiler hints are free
+                   queued next-epoch batches  at run time)
 =================  =========================  ===============================
+
+**Hints.**  The ``hinted`` and ``prefetch`` lanes' rank arrays come from a
+:class:`~repro.hints.HintPipeline` (``hints=`` at construction): per epoch
+the pipeline's providers (static table analysis, bounded lookahead over the
+batch queue, EWMA phase-change re-weighting) produce fresh ``hint_rank`` /
+``prefetch_rank`` arrays which replace state leaves before the epoch step —
+a host-to-device transfer counted in ``DISPATCH_COUNTS["hint_refresh"]``,
+*not* a third dispatch.  The ``prefetch`` lane promotes blocks the lookahead
+says the next epoch will touch, before the accesses land; its boundary
+migration therefore streams concurrently with the epoch it serves, accounted
+via ``MemSystem.overlapped_epoch_time_s`` (the migration issued at the
+*previous* boundary is charged against the epoch it overlapped, its hidden
+share recorded in ``EpochRecord.hidden_s``).
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
+from collections import deque
 from functools import partial
 from typing import Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -68,7 +85,7 @@ __all__ = [
 
 ALL_POLICIES = (
     "hmu_oracle", "nb_two_touch", "reactive_watermark", "proactive_ewma",
-    "hinted",
+    "hinted", "prefetch",
 )
 
 # Host-side cost per telemetry event (see dlrm.tracesim for the NB/PEBS
@@ -82,9 +99,12 @@ HMU_DRAIN_COST_S = 2e-9
 # the fused step — tests prove the epoch loop compiles once.  DISPATCH_COUNTS
 # ticks per *call*: a fused epoch is exactly observe_all + epoch_step; the
 # reference path's count grows with every policy-lane jit/eager op and
-# full-array pull it issues.
+# full-array pull it issues.  "hint_refresh" counts HintPipeline refreshes —
+# host-to-device transfers of the rank arrays, not dispatches — so the
+# 2-dispatch/epoch claim stays auditable with hints enabled.
 TRACE_COUNTS = {"epoch_step": 0}
-DISPATCH_COUNTS = {"observe_all": 0, "epoch_step": 0, "reference": 0}
+DISPATCH_COUNTS = {"observe_all": 0, "epoch_step": 0, "reference": 0,
+                   "hint_refresh": 0}
 
 
 @dataclasses.dataclass
@@ -102,6 +122,7 @@ class EpochRecord:
     promoted: int            # migrations applied at epoch end
     demoted: int
     host_events: float       # telemetry events charged this epoch
+    hidden_s: float = 0.0    # migration time overlapped away (prefetch lane)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -176,6 +197,7 @@ class _FusedState:
     placement: Placement         # lane-stacked: (L, k_hot) / (L, n_blocks)
     pred: jax.Array              # (n_blocks,) f32 EWMA (the proactive lane's)
     hint_rank: jax.Array         # (n_blocks,) f32 static priorities
+    prefetch_rank: jax.Array     # (n_blocks,) f32 lookahead priorities
     prev_hmu: jax.Array          # (n_blocks,) i32 epoch-delta baselines
     prev_pebs: jax.Array
 
@@ -253,6 +275,12 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array, *,
             r = row("score", selectk.sortable_key(score),
                     d_pebs.astype(jnp.float32))
             min_key, cap = 0, k
+        elif name == "prefetch":
+            # lookahead rank in [0,1]; min_key 1 gates rank > 0 (int32 bits of
+            # any positive float are >= 1), matching policy.prefetch's gate
+            r = row("la", selectk.sortable_key(state.prefetch_rank),
+                    state.prefetch_rank)
+            min_key, cap = 1, k
         else:  # pragma: no cover - guarded in __init__
             raise ValueError(name)
         lane_row.append(r)
@@ -305,7 +333,8 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array, *,
     }
     state = _FusedState(
         bundle=bundle, placement=pl, pred=pred_new,
-        hint_rank=state.hint_rank, prev_hmu=hmu_now, prev_pebs=pebs_now,
+        hint_rank=state.hint_rank, prefetch_rank=state.prefetch_rank,
+        prev_hmu=hmu_now, prev_pebs=pebs_now,
     )
     return state, out
 
@@ -325,6 +354,14 @@ class EpochRuntime:
     ``NamedSharding`` axis named ``axis``) shards every (n_blocks,)-sized
     array — collector histograms and lane placements — across devices for
     paper-scale (5.24 M page) runs; see ``launch.mesh.make_telemetry_mesh``.
+
+    ``hints`` (a :class:`repro.hints.HintPipeline`) refreshes the hinted
+    lane's ``hint_rank`` and the prefetch lane's ``prefetch_rank`` every
+    epoch from the pipeline's providers; ``run`` buffers the epoch stream by
+    the pipeline's lookahead depth so ``step`` sees the queued next epochs.
+    ``prefetch_overlap`` in [0,1] is how much of the prefetch lane's boundary
+    migration streams concurrently with the epoch it serves (0 = the same
+    stop-the-world charging every other lane pays).
     """
 
     def __init__(
@@ -343,6 +380,8 @@ class EpochRuntime:
         hint_weight: float = 0.25,
         reactive_hot_threshold: Optional[int] = None,
         nb_rate_limit: Optional[int] = None,
+        hints=None,
+        prefetch_overlap: float = 1.0,
         fused: bool = True,
         mesh=None,
         mesh_axis: str = "blocks",
@@ -364,9 +403,17 @@ class EpochRuntime:
         self.hint_rank = (np.zeros((n_blocks,), np.float32)
                           if hint_rank is None
                           else np.asarray(hint_rank, np.float32))
+        self.prefetch_rank = np.zeros((n_blocks,), np.float32)
         self.hint_weight = float(hint_weight)
         self.reactive_hot_threshold = reactive_hot_threshold
         self.nb_rate_limit = nb_rate_limit
+        self.hints = hints                  # Optional[repro.hints.HintPipeline]
+        self.prefetch_overlap = float(prefetch_overlap)
+        if not 0.0 <= self.prefetch_overlap <= 1.0:
+            raise ValueError(f"prefetch_overlap must be in [0, 1], "
+                             f"got {prefetch_overlap!r}")
+        self._prefetch_pending = 0          # blocks moved at the last boundary
+        self._mesh, self._mesh_axis = mesh, mesh_axis
         self.fused = bool(fused)
         scan = nb_scan_rate if nb_scan_rate is not None else max(n_blocks // 16, 1)
         bundle = tel.bundle_init(
@@ -396,6 +443,7 @@ class EpochRuntime:
                 placement=Placement.create(self.n_blocks, self.k_hot, lanes=L),
                 pred=jnp.zeros((self.n_blocks,), jnp.float32),
                 hint_rank=jnp.asarray(self.hint_rank),
+                prefetch_rank=jnp.asarray(self.prefetch_rank),
                 prev_hmu=zeros_n(), prev_pebs=zeros_n(),
             )
             if mesh is not None:
@@ -432,6 +480,50 @@ class EpochRuntime:
                 pred=pred if name == "proactive_ewma" else None)
             for i, name in enumerate(self._lane_names)
         }
+
+    @property
+    def pending_migration_s(self) -> float:
+        """Migration time of the prefetch lane's last boundary, not yet
+        charged to any record: pending migration overlaps the NEXT epoch's
+        stream, so at the end of a finite run the final boundary's cost has
+        no epoch to land in.  Surfaced here (and in ``run_online``'s summary)
+        so lane-total comparisons can account for it instead of it being
+        silently dropped — every other lane charges its final boundary into
+        its last record even though that migration serves no epoch either."""
+        return self.system.migration_time_s(self._prefetch_pending,
+                                            self.block_bytes)
+
+    # ----------------------------------------------------------- hint refresh
+    def set_hint_ranks(self, hint_rank: Optional[np.ndarray] = None,
+                       prefetch_rank: Optional[np.ndarray] = None) -> None:
+        """Replace the hint arrays the next epoch step reads.  On the fused
+        path this swaps state leaves — a host-to-device transfer (sharded
+        like the rest of the state under ``mesh``), not a dispatch, so the
+        epoch stays at two; counted in ``DISPATCH_COUNTS['hint_refresh']``.
+        An array that is the SAME object as the current one is skipped (the
+        HintPipeline returns its cached static rank until the phase detector
+        moves the scale), so an unchanged n-block hint_rank is not
+        re-uploaded every epoch — the counter only ticks when something
+        actually changed."""
+        updates = {}
+        if hint_rank is not None and hint_rank is not self.hint_rank:
+            self.hint_rank = np.asarray(hint_rank, np.float32)
+            updates["hint_rank"] = self.hint_rank
+        if prefetch_rank is not None and prefetch_rank is not self.prefetch_rank:
+            self.prefetch_rank = np.asarray(prefetch_rank, np.float32)
+            updates["prefetch_rank"] = self.prefetch_rank
+        if updates:
+            DISPATCH_COUNTS["hint_refresh"] += 1
+        if self.fused and updates:
+            def put(x: np.ndarray) -> jax.Array:
+                if self._mesh is None:
+                    return jnp.asarray(x)
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                return jax.device_put(
+                    x, NamedSharding(self._mesh, P(self._mesh_axis)))
+
+            self._state = dataclasses.replace(
+                self._state, **{k: put(v) for k, v in updates.items()})
 
     # ------------------------------------------------------------- migrate
     def _apply_plan(self, lane: _Lane, plan: policy.MigrationPlan,
@@ -516,17 +608,24 @@ class EpochRuntime:
             plan = policy.hinted(jnp.asarray(est, jnp.int32),
                                  jnp.asarray(self.hint_rank), k,
                                  hint_weight=self.hint_weight)
+        elif lane.name == "prefetch":
+            est = self.prefetch_rank
+            plan = policy.prefetch(jnp.asarray(est), k)
         else:  # pragma: no cover - guarded in __init__
             raise ValueError(lane.name)
         return plan, np.asarray(est), pre_demoted
 
     # ---------------------------------------------------------------- step
-    def step(self, batches) -> Dict[str, EpochRecord]:
+    def step(self, batches, lookahead: Sequence = ()) -> Dict[str, EpochRecord]:
         """Consume one epoch ``(n_batches, batch_size)``: fused observe, then
-        decide/migrate/account every lane.  Returns this epoch's records."""
+        decide/migrate/account every lane.  ``lookahead`` is the queued
+        upcoming epochs (the dataloader's prefetch queue) handed to the hint
+        pipeline, if any.  Returns this epoch's records."""
         batches = np.ascontiguousarray(np.asarray(batches, np.int32))
         if batches.ndim != 2:
             raise ValueError(f"epoch batches must be 2-D, got {batches.shape}")
+        if self.hints is not None:
+            self.set_hint_ranks(*self.hints.epoch_ranks(batches, lookahead))
         if self.fused:
             return self._step_fused(batches)
         return self._step_reference(batches)
@@ -539,18 +638,34 @@ class EpochRuntime:
             n_fast, n_slow, self.bytes_per_access)
         per_event = (NB_FAULT_COST_S if name == "nb_two_touch" else
                      PEBS_SAMPLE_COST_S if name == "hinted" else
+                     0.0 if name == "prefetch" else
                      HMU_DRAIN_COST_S)
         host_tax_s = host_events * per_event
-        migration_s = self.system.migration_time_s(
-            promoted + demoted, self.block_bytes)
+        hidden_s = 0.0
+        if name == "prefetch":
+            # Lookahead lets the prefetch lane issue its boundary migration
+            # ahead of the epoch it serves, so the migration charged here is
+            # the one issued at the PREVIOUS boundary — it streamed under
+            # THIS epoch's accesses, and the overlapped share is hidden
+            # (MemSystem.overlapped_epoch_time_s).  Every other lane pays its
+            # boundary migration stop-the-world, same as before.
+            moved = self._prefetch_pending
+            self._prefetch_pending = promoted + demoted
+            migration_s = self.system.migration_time_s(moved, self.block_bytes)
+            hidden_s = self.system.migration_overlap_s(
+                n_slow, self.bytes_per_access, moved, self.block_bytes,
+                self.prefetch_overlap)
+        else:
+            migration_s = self.system.migration_time_s(
+                promoted + demoted, self.block_bytes)
         return EpochRecord(
             epoch=self.epoch, lane=name,
-            time_s=access_s + host_tax_s + migration_s,
+            time_s=access_s + host_tax_s + migration_s - hidden_s,
             access_s=access_s, host_tax_s=host_tax_s, migration_s=migration_s,
             accuracy=(inter / resident) if resident else 0.0,
             coverage=(inter / self.k_hot) if self.k_hot else 0.0,
             resident=resident, promoted=promoted, demoted=demoted,
-            host_events=host_events,
+            host_events=host_events, hidden_s=hidden_s,
         )
 
     def _step_fused(self, batches: np.ndarray) -> Dict[str, EpochRecord]:
@@ -577,7 +692,8 @@ class EpochRuntime:
         out: Dict[str, EpochRecord] = {}
         for i, name in enumerate(self._lane_names):
             host_events = (d_nb_host if name == "nb_two_touch" else
-                           d_pebs_host if name == "hinted" else drained)
+                           d_pebs_host if name == "hinted" else
+                           0.0 if name == "prefetch" else drained)
             rec = self._record(
                 name,
                 n_fast=float(out_host["n_fast"][i]),
@@ -626,7 +742,8 @@ class EpochRuntime:
             served = lane.resident_ids().copy()
             n_fast, n_slow = split_accesses_by_tier(d_true, lane.fast_mask)
             host_events = (d_nb_host if lane.name == "nb_two_touch" else
-                           d_pebs_host if lane.name == "hinted" else drained)
+                           d_pebs_host if lane.name == "hinted" else
+                           0.0 if lane.name == "prefetch" else drained)
 
             # -- decide + migrate for the NEXT epoch
             plan, est, pre_demoted = self._plan(
@@ -646,8 +763,21 @@ class EpochRuntime:
 
     # ----------------------------------------------------------------- run
     def run(self, epochs: Iterable) -> Trajectory:
-        for batches in epochs:
-            self.step(batches)
+        """Drive a whole epoch stream.  With a hint pipeline attached, the
+        stream is buffered by the pipeline's lookahead depth so each ``step``
+        sees the queued next epochs — the dataloader's prefetch queue, which
+        is what the lookahead provider models."""
+        depth = self.hints.lookahead_depth if self.hints is not None else 0
+        it = iter(epochs)
+        buf: deque = deque()                # current epoch + queued lookahead
+        while True:
+            if not buf:
+                buf.extend(itertools.islice(it, 1))
+                if not buf:
+                    break
+            batches = buf.popleft()
+            buf.extend(itertools.islice(it, depth - len(buf)))
+            self.step(batches, lookahead=tuple(buf))
         return self.trajectory()
 
     def trajectory(self) -> Trajectory:

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "sortable_key", "select_top_k", "top_k_mask", "stable_rank_sparse",
+    "compact",
 ]
 
 _SIGN = jnp.uint32(0x80000000)
@@ -105,9 +106,11 @@ def bottom_k_mask(key: jax.Array, counts) -> jax.Array:
     return _selection_mask(~_to_u(key), counts)[0]
 
 
-def _compact(csel: jax.Array, k: int) -> jax.Array:
-    """Indices of the selected elements in ascending order, given the
-    inclusive prefix count of a selection mask with >= k true entries."""
+def compact(csel: jax.Array, k: int) -> jax.Array:
+    """Indices of the first k selected elements in ascending order, given the
+    inclusive prefix count of a selection mask along the last axis (fewer
+    than k true entries fill with n).  Shared by :func:`select_top_k` and
+    ``placement.apply_plan``'s free-slot assignment."""
     targets = jnp.arange(1, k + 1, dtype=csel.dtype)
 
     def pick(cs):
@@ -127,7 +130,7 @@ def select_top_k(key: jax.Array, k: int, return_mask: bool = False):
     k = min(k, n)
     u = _to_u(key)
     sel, csel = _selection_mask(u, k)
-    ids = _compact(csel, k)                       # ascending index order
+    ids = compact(csel, k)                        # ascending index order
     u_sel = jnp.take_along_axis(u, ids, axis=-1)
 
     def order(us, i):

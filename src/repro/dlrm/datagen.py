@@ -117,8 +117,16 @@ class PhaseShiftSampler:
         self.spec = spec
         self._base = ZipfPageSampler(spec, seed)
         n = spec.n_pages
+        # rotations are modular, so rotate_by >= n_pages wraps (rotate_by == n
+        # is the identity rotation) rather than indexing out of bounds
         self.rotate_by = int(rotate_by) if rotate_by is not None else n // 3
         self._rng = np.random.default_rng(seed + 2)
+
+    @property
+    def rank_to_page(self) -> np.ndarray:
+        """Phase-0 popularity-rank -> page-id layout (what a compiler that
+        laid the table out knows; see ``repro.hints.StaticTableHints``)."""
+        return self._base.rank_to_page
 
     def sample(self, n: int, phase: int = 0) -> np.ndarray:
         u = self._rng.random(n)
@@ -130,6 +138,16 @@ class PhaseShiftSampler:
         n = self.spec.n_pages
         ranks = (np.arange(k) + phase * self.rotate_by) % n
         return self._base.rank_to_page[ranks]
+
+    def page_probabilities(self, phase: int = 0) -> np.ndarray:
+        """Per-page access probability during ``phase`` (the base Zipf mass
+        rotated onto that phase's pages)."""
+        n = self.spec.n_pages
+        p = self._base.page_probabilities()[self._base.rank_to_page]  # by rank
+        shifted = (np.arange(n) + phase * self.rotate_by) % n
+        out = np.empty_like(p)
+        out[self._base.rank_to_page[shifted]] = p
+        return out
 
 
 def phase_shift_epochs(
@@ -149,11 +167,9 @@ def phase_shift_epochs(
                         for _ in range(batches_per_epoch)])
 
 
-def trace_stats(spec: DLRMTraceSpec, n_batches: int = 20, seed: int = 0) -> dict:
-    """Measured analogues of the paper's dataset stats (computed analytically
-    from the popularity distribution; exact in expectation)."""
-    s = ZipfPageSampler(spec, seed)
-    p = np.sort(s.page_probabilities())[::-1]
+def _distribution_stats(spec: DLRMTraceSpec, probs: np.ndarray,
+                        n_batches: int) -> dict:
+    p = np.sort(probs)[::-1]
     total_lookups = spec.lookups_per_batch * n_batches
     exp_unique = float(np.sum(1.0 - np.exp(-total_lookups * p)))
     k = min(spec.k_hot_paper, spec.n_pages)
@@ -164,3 +180,41 @@ def trace_stats(spec: DLRMTraceSpec, n_batches: int = 20, seed: int = 0) -> dict
         "topk_traffic_share": float(p[:k].sum()),
         "traffic_gb_per_batch": spec.lookups_per_batch * spec.row_bytes / 1e9,
     }
+
+
+def trace_stats(spec: DLRMTraceSpec, n_batches: int = 20, seed: int = 0,
+                phases: Optional[int] = None,
+                rotate_by: Optional[int] = None) -> dict:
+    """Measured analogues of the paper's dataset stats (computed analytically
+    from the popularity distribution; exact in expectation).
+
+    With ``phases`` the trace is a :class:`PhaseShiftSampler` and the result
+    gains a ``"phases"`` list with the hot-head drift each rotation causes —
+    ``hot_overlap_prev`` / ``hot_overlap_phase0`` (fraction of the hot head
+    of size ``k_head`` shared with the previous phase / phase 0; 1.0 means
+    the rotation wrapped to an identity, 0.0 a fully disjoint hot head).
+    The distribution stats are reported once: a rotation only permutes the
+    same Zipf mass onto a different support, so they are identical in every
+    phase.  The head is the paper's promoted count capped at a tenth of the
+    table, so the drift stays meaningful for reduced specs whose page count
+    is below ``k_hot_paper``.  ``rotate_by`` is modular, so values >=
+    ``n_pages`` wrap."""
+    if phases is None:
+        s = ZipfPageSampler(spec, seed)
+        return _distribution_stats(spec, s.page_probabilities(), n_batches)
+    ps = PhaseShiftSampler(spec, rotate_by=rotate_by, seed=seed)
+    k = min(spec.k_hot_paper, max(spec.n_pages // 10, 1))
+    out = _distribution_stats(spec, ps.page_probabilities(0), n_batches)
+    out["rotate_by"] = ps.rotate_by
+    out["k_head"] = k
+    out["phases"] = []
+    hot0 = prev = ps.true_top_k_pages(k, phase=0)
+    for phase in range(int(phases)):
+        hot = ps.true_top_k_pages(k, phase=phase)
+        out["phases"].append({
+            "phase": phase,
+            "hot_overlap_prev": float(np.intersect1d(hot, prev).size / k),
+            "hot_overlap_phase0": float(np.intersect1d(hot, hot0).size / k),
+        })
+        prev = hot
+    return out

@@ -4,8 +4,9 @@
   resulting tiering speedups (paper: HMU 2.94x vs PEBS, 1.73x vs NB).
 * ``run_table1`` — DLRM embedding-bag inference: HMU vs Linux NB vs DRAM-only
   (paper: 1.94x vs NB, 1.03x slower than DRAM-only, 9% top-tier footprint).
-* ``run_online`` — the §VI online regime: the EpochRuntime drives all five
-  policies over a phase-shifting DLRM trace and returns the per-epoch
+* ``run_online`` — the §VI online regime: the EpochRuntime drives all six
+  policies (incl. the hint-fed ``hinted``/``prefetch`` lanes when
+  ``hints=True``) over a phase-shifting DLRM trace and returns the per-epoch
   trajectory (time / accuracy / coverage series instead of one end state).
 
 Both run at full paper scale (5.24 M / 2.62 M pages) as *trace* sims: no 20 GB
@@ -329,12 +330,22 @@ def run_online(
     pebs_period: int = 401,
     rotate_by: Optional[int] = None,
     seed: int = 0,
+    hints=False,
+    lookahead_depth: int = 1,
+    prefetch_overlap: float = 1.0,
     fused: bool = True,
     mesh=None,
 ) -> dict:
     """§VI online regime: multi-epoch phase-shifting DLRM trace through the
     EpochRuntime.  The hot set rotates at ``shift_at``; the trajectory shows
     which telemetry/policy pairs re-converge and which collapse (NB).
+
+    ``hints=True`` attaches the default :class:`repro.hints.HintPipeline`
+    for the spec (static table analysis + ``lookahead_depth`` epochs of
+    lookahead + phase-change re-weighting) so the hinted lane runs on
+    compiler-derived ranks and the prefetch lane is live; a pre-built
+    pipeline may be passed instead.  ``prefetch_overlap`` is how much of the
+    prefetch lane's migration streams under the epoch it serves.
 
     ``fused`` selects the device-resident two-dispatch epoch loop (default)
     or the per-lane reference path; ``mesh`` (see
@@ -345,12 +356,21 @@ def run_online(
     """
     n_pages = spec.n_pages
     k = min(k_hot if k_hot is not None else max(n_pages // 20, 1), n_pages)
+    if hints is True:
+        from ..hints import HintPipeline
+        # layout from the same sampler the trace below uses, so the static
+        # hints point at the actual table layout by construction
+        layout = datagen.PhaseShiftSampler(
+            spec, rotate_by=rotate_by, seed=seed).rank_to_page
+        hints = HintPipeline.for_dlrm(spec, seed=seed, depth=lookahead_depth,
+                                      layout=layout)
     rt = EpochRuntime(
         n_pages, k, policies=policies, system=system,
         bytes_per_access=float(spec.row_bytes),
         block_bytes=float(spec.page_bytes),
         pebs_period=pebs_period,
         nb_scan_rate=max(n_pages // batches_per_epoch, 1),
+        hints=hints or None, prefetch_overlap=prefetch_overlap,
         fused=fused, mesh=mesh,
     )
     traj = rt.run(datagen.phase_shift_epochs(
@@ -360,19 +380,33 @@ def run_online(
     summary = {}
     for name in policies:
         ts = traj.times(name)
-        accs = np.array([r.accuracy for r in traj.lane(name)])
+        recs = traj.lane(name)
+        accs = np.array([r.accuracy for r in recs])
+        covs = np.array([r.coverage for r in recs])
         post = slice(shift_at, None)
         summary[name] = {
             "mean_time_us": float(ts.mean() * 1e6),
             "post_shift_mean_time_us": float(ts[post].mean() * 1e6),
             "final_accuracy": float(accs[-1]),
+            "final_coverage": float(covs[-1]),
+            "post_shift_mean_coverage": float(covs[post].mean()),
             "post_shift_recovery_epochs": int(np.argmax(
                 accs[post] >= 0.5)) if (accs[post] >= 0.5).any() else -1,
+            "hidden_s_total": float(sum(r.hidden_s for r in recs)),
         }
+        if name == "prefetch":
+            # the final boundary's migration overlaps an epoch that never
+            # runs; report it so lane-total comparisons stay honest
+            summary[name]["pending_migration_us"] = float(
+                rt.pending_migration_s * 1e6)
     if "proactive_ewma" in policies and "nb_two_touch" in policies:
         summary["proactive_vs_nb_post_shift"] = float(
             summary["nb_two_touch"]["post_shift_mean_time_us"]
             / summary["proactive_ewma"]["post_shift_mean_time_us"])
+    if "prefetch" in policies and "hinted" in policies:
+        summary["prefetch_vs_hinted_post_shift_coverage"] = (
+            summary["prefetch"]["post_shift_mean_coverage"]
+            - summary["hinted"]["post_shift_mean_coverage"])
     return {
         "trajectory": json.loads(traj.to_json(shift_at=shift_at)),
         "summary": summary,

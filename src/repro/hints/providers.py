@@ -1,0 +1,175 @@
+"""Hint providers — the compiler/dataloader side of the §VI hint triad.
+
+The paper's HMU case rests on reactive placement, proactive movement, and
+*compiler hints*.  Until now the ``hinted`` lane consumed caller-provided
+oracle ranks; these providers derive per-block ``hint_rank`` arrays in [0,1]
+from what a compiler/dataloader legitimately knows about the workload:
+
+* :class:`StaticTableHints` — static analysis of the embedding-table
+  *structure*: the compiler laid the rows out, so it knows which popularity
+  rank lands on which page (the table layout) and the row-popularity prior
+  (the Zipf skew of the training distribution), including how
+  ``rows_per_page`` rows alias into one page.  It knows **nothing** about
+  runtime phase rotations — after a :class:`~repro.dlrm.datagen.
+  PhaseShiftSampler` rotation its ranks point at the *old* hot head, which is
+  exactly the failure mode the lookahead provider and the phase detector
+  exist to cover.
+* :class:`LookaheadWindow` — the "compiler knows the next minibatch's
+  indices" model: a bounded queue of upcoming epoch batch arrays (the
+  dataloader's prefetch queue), histogrammed and normalized.  This is what
+  drives the ``prefetch`` policy lane.
+* :class:`PhaseChangeDetector` — an EWMA over the epoch's host-side access
+  histogram; a similarity collapse against the EWMA flags a hot-set rotation
+  and permanently down-weights the static hints (their layout prior is stale
+  from that point on).
+
+Everything here is host-side numpy *by design*: providers model the
+compiler/dataloader, which sees batch queues before they are dispatched.  The
+resulting rank arrays ride into the fused epoch step as inputs — a transfer,
+not a dispatch.
+"""
+from __future__ import annotations
+
+import weakref
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..dlrm.datagen import DLRMTraceSpec
+
+__all__ = ["StaticTableHints", "LookaheadWindow", "PhaseChangeDetector",
+           "epoch_histogram"]
+
+# One-entry memo: with depth-1 lookahead the SAME epoch array is histogrammed
+# twice — by the window at step e-1 (as lookahead) and by the detector at
+# step e.  Keyed by weakref identity so a freed-and-reused address can never
+# serve a stale histogram.
+_hist_memo = (None, 0, None)            # (weakref, n_blocks, hist)
+
+
+def epoch_histogram(batches: np.ndarray, n_blocks: int) -> np.ndarray:
+    """Per-block float64 access histogram of one epoch's batches (ids outside
+    [0, n_blocks) dropped).  Callers must not mutate the result."""
+    global _hist_memo
+    ref, n, h = _hist_memo
+    if ref is not None and ref() is batches and n == n_blocks:
+        return h
+    h = np.bincount(np.asarray(batches).ravel(),
+                    minlength=n_blocks)[:n_blocks].astype(np.float64)
+    try:
+        _hist_memo = (weakref.ref(batches), n_blocks, h)
+    except TypeError:                    # non-weakrefable input: skip memo
+        pass
+    return h
+
+
+class StaticTableHints:
+    """Per-page hint ranks from the embedding table's compile-time structure.
+
+    Page weight = sum of the row-level Zipf(alpha) prior over the
+    ``rows_per_page`` rows aliased into that page (page-granular telemetry
+    cannot separate rows that share a page; neither can a page hint), mapped
+    through ``rank_to_page`` (the layout: which popularity rank the compiler
+    placed on which page) and normalized so the hottest page ranks 1.0.
+
+    ``clip_rank`` keeps only the hottest ``clip_rank`` pages' hints and zeroes
+    the tail — a compiler annotates the hot head, not five million pages.
+    """
+
+    def __init__(self, spec: DLRMTraceSpec, rank_to_page: np.ndarray,
+                 clip_rank: Optional[int] = None):
+        n = spec.n_pages
+        rank_to_page = np.asarray(rank_to_page)
+        if rank_to_page.shape != (n,):
+            raise ValueError(f"rank_to_page must be ({n},), "
+                             f"got {rank_to_page.shape}")
+        if clip_rank is not None and clip_rank < 1:
+            raise ValueError(f"clip_rank must be >= 1 (clipping every hint "
+                             f"makes the rank 0/0), got {clip_rank}")
+        rpp = max(spec.rows_per_page, 1)
+        # row-level prior aggregated per page-popularity rank: the page with
+        # popularity rank r aliases rows [r*rpp, (r+1)*rpp); accumulated one
+        # row-offset at a time so paper-scale tables (n*rpp ~ 20M rows) never
+        # materialize an n*rpp-sized temporary
+        base = np.arange(n, dtype=np.float64) * rpp
+        page_w = np.zeros((n,), np.float64)
+        for j in range(1, rpp + 1):
+            page_w += (base + j) ** (-spec.alpha)
+        if clip_rank is not None:
+            page_w[int(clip_rank):] = 0.0
+        rank = np.zeros((n,), np.float32)
+        rank[rank_to_page] = (page_w / page_w[0]).astype(np.float32)
+        self.spec = spec
+        self.rank = rank
+
+    def __call__(self) -> np.ndarray:
+        return self.rank
+
+
+class LookaheadWindow:
+    """Bounded lookahead over the dataloader's batch queue.
+
+    ``rank(upcoming)`` histograms up to ``depth`` upcoming epoch batch arrays
+    (nearer epochs weighted by ``decay**distance``) and normalizes to [0,1];
+    blocks outside the window rank 0 and are never prefetched.  An empty
+    queue (end of stream) yields all-zeros — the prefetch lane goes idle.
+    """
+
+    def __init__(self, n_blocks: int, depth: int = 1, decay: float = 0.5):
+        if depth < 1:
+            raise ValueError(f"lookahead depth must be >= 1, got {depth}")
+        self.n_blocks = int(n_blocks)
+        self.depth = int(depth)
+        self.decay = float(decay)
+        # single cached empty rank, so an idle window returns the SAME object
+        # every epoch and the runtime's identity-skip avoids re-uploading it
+        self._zeros = np.zeros((self.n_blocks,), np.float32)
+
+    def rank(self, upcoming: Sequence[np.ndarray]) -> np.ndarray:
+        counts = np.zeros((self.n_blocks,), np.float64)
+        for d, batches in enumerate(upcoming[: self.depth]):
+            counts += (self.decay ** d) * epoch_histogram(batches,
+                                                          self.n_blocks)
+        top = counts.max()
+        if top <= 0.0:
+            return self._zeros
+        return (counts / top).astype(np.float32)
+
+
+class PhaseChangeDetector:
+    """EWMA phase-change detector: re-weights static hints after rotations.
+
+    Tracks an EWMA of the epoch's access histogram (the dataloader's own view
+    of the batches it just queued — no telemetry readback) and compares each
+    new epoch against it by cosine similarity.  A drop below ``threshold``
+    flags a hot-set rotation: the static-hint scale is multiplied by
+    ``penalty`` (the layout prior is stale from now on — there is no recovery
+    path, a rotated workload does not rotate back on its own) and the EWMA
+    snaps to the new phase so one rotation is detected once, not every epoch.
+    """
+
+    def __init__(self, n_blocks: int, alpha: float = 0.5,
+                 threshold: float = 0.6, penalty: float = 0.25):
+        self.n_blocks = int(n_blocks)
+        self.alpha = float(alpha)
+        self.threshold = float(threshold)
+        self.penalty = float(penalty)
+        self.scale = 1.0
+        self.shifts_detected = 0
+        self._ewma: Optional[np.ndarray] = None
+
+    def update(self, batches: np.ndarray) -> float:
+        """Fold one epoch's batches in; returns the current static-hint scale."""
+        h = epoch_histogram(batches, self.n_blocks)
+        if self._ewma is None:
+            self._ewma = h
+            return self.scale
+        denom = np.linalg.norm(self._ewma) * np.linalg.norm(h)
+        sim = float(self._ewma @ h / denom) if denom > 0.0 else 1.0
+        if sim < self.threshold:
+            self.shifts_detected += 1
+            self.scale *= self.penalty
+            self._ewma = h
+        else:
+            self._ewma = self.alpha * h + (1.0 - self.alpha) * self._ewma
+        return self.scale

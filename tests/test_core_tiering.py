@@ -228,3 +228,79 @@ def test_coldest_victims_orders_by_heat():
     s2b = jnp.asarray([0, 1, 2, 3])   # all four blocks resident
     vic = policy.coldest_victims(est, s2b, n=2)
     assert [int(x) for x in np.asarray(vic)] == [1, 3]
+
+
+# ----------------------------------------------- cost model: overlap semantics
+def test_access_time_overlap_zero_is_serial_tier_sum():
+    """overlap=0 (the default) is exactly fast-tier + slow-tier time."""
+    for sysm in (CXL_SYSTEM, TPU_V5E_SYSTEM):
+        nf, ns, bpa = 3e5, 7e5, 256.0
+        tf = sysm.tier_time_s(nf, nf * bpa, sysm.fast)
+        ts = sysm.tier_time_s(ns, ns * bpa, sysm.slow)
+        assert sysm.access_time_s(nf, ns, bpa) == pytest.approx(tf + ts)
+        assert sysm.access_time_s(nf, ns, bpa, overlap=0.0) == \
+            pytest.approx(tf + ts)
+
+
+def test_access_time_overlap_one_hides_all_slow_tier_time():
+    nf, ns, bpa = 3e5, 7e5, 256.0
+    tf = CXL_SYSTEM.tier_time_s(nf, nf * bpa, CXL_SYSTEM.fast)
+    assert CXL_SYSTEM.access_time_s(nf, ns, bpa, overlap=1.0) == \
+        pytest.approx(tf)
+
+
+def test_access_time_monotone_decreasing_in_overlap():
+    prev = float("inf")
+    for ov in np.linspace(0.0, 1.0, 11):
+        t = CXL_SYSTEM.access_time_s(1e5, 9e5, 256.0, overlap=float(ov))
+        assert t <= prev
+        prev = t
+
+
+@pytest.mark.parametrize("bad", [-0.01, 1.01, 2.0, -1.0, float("nan")])
+def test_access_time_rejects_out_of_range_overlap(bad):
+    with pytest.raises(ValueError, match="overlap"):
+        CXL_SYSTEM.access_time_s(1e5, 9e5, 256.0, overlap=bad)
+    with pytest.raises(ValueError, match="overlap"):
+        CXL_SYSTEM.migration_overlap_s(9e5, 256.0, 100, 4096.0, overlap=bad)
+    with pytest.raises(ValueError, match="overlap"):
+        CXL_SYSTEM.overlapped_epoch_time_s(1e5, 9e5, 256.0, 100, 4096.0,
+                                           overlap=bad)
+
+
+def test_overlapped_epoch_time_zero_overlap_is_stop_the_world():
+    """overlap=0 charges migration serially: access_time_s + migration_time_s."""
+    nf, ns, bpa, nb, bb = 2e5, 8e5, 256.0, 5_000, 4096.0
+    serial = (CXL_SYSTEM.access_time_s(nf, ns, bpa)
+              + CXL_SYSTEM.migration_time_s(nb, bb))
+    assert CXL_SYSTEM.overlapped_epoch_time_s(nf, ns, bpa, nb, bb,
+                                              overlap=0.0) == \
+        pytest.approx(serial)
+
+
+def test_overlapped_epoch_time_full_overlap_hides_shorter_leg():
+    """overlap=1 hides min(slow-tier access time, migration DMA) — never more
+    than the serial sum, never less than the unhidden legs."""
+    nf, ns, bpa, bb = 2e5, 8e5, 256.0, 4096.0
+    ts = CXL_SYSTEM.tier_time_s(ns, ns * bpa, CXL_SYSTEM.slow)
+    for nb in (10, 5_000, 5_000_000):     # mig << ts, mig ~ ts, mig >> ts
+        mig = CXL_SYSTEM.migration_time_s(nb, bb)
+        access = CXL_SYSTEM.access_time_s(nf, ns, bpa)
+        got = CXL_SYSTEM.overlapped_epoch_time_s(nf, ns, bpa, nb, bb,
+                                                 overlap=1.0)
+        assert got == pytest.approx(access + mig - min(ts, mig))
+        assert got <= access + mig + 1e-12
+        assert got >= max(access, mig) - 1e-12
+
+
+def test_overlapped_epoch_time_monotone_in_overlap():
+    prev = float("inf")
+    for ov in np.linspace(0.0, 1.0, 11):
+        t = CXL_SYSTEM.overlapped_epoch_time_s(2e5, 8e5, 256.0, 5_000, 4096.0,
+                                               overlap=float(ov))
+        assert t <= prev
+        prev = t
+
+
+def test_migration_overlap_zero_blocks_hides_nothing():
+    assert CXL_SYSTEM.migration_overlap_s(8e5, 256.0, 0, 4096.0) == 0.0

@@ -1,0 +1,77 @@
+"""DLRM trace-generator tests: per-phase trace_stats for PhaseShiftSampler
+and the rotate_by >= n_pages wraparound regression (rotations are modular —
+rotate_by == n_pages is the identity, n_pages + r behaves like r)."""
+import numpy as np
+import pytest
+
+from repro.dlrm import datagen
+
+SPEC = datagen.SMALL
+
+
+def test_trace_stats_default_is_single_distribution():
+    st = datagen.trace_stats(SPEC, n_batches=10)
+    assert {"table_gb", "touched_fraction", "touched_gb",
+            "topk_traffic_share", "traffic_gb_per_batch"} <= set(st)
+    assert "phases" not in st
+    assert 0.0 < st["touched_fraction"] <= 1.0
+    assert 0.0 < st["topk_traffic_share"] <= 1.0
+
+
+def test_trace_stats_reports_per_phase_rows():
+    n = SPEC.n_pages
+    st = datagen.trace_stats(SPEC, n_batches=10, phases=3, rotate_by=n // 3)
+    assert st["rotate_by"] == n // 3
+    # distribution stats are phase-invariant (a rotation permutes the same
+    # Zipf mass), so they are reported once at the top level
+    assert 0.0 < st["topk_traffic_share"] <= 1.0
+    rows = st["phases"]
+    assert [r["phase"] for r in rows] == [0, 1, 2]
+    for r in rows:
+        assert 0.0 <= r["hot_overlap_prev"] <= 1.0
+    assert rows[0]["hot_overlap_prev"] == 1.0      # phase 0 vs itself
+    assert rows[0]["hot_overlap_phase0"] == 1.0
+    # a third-of-the-table rotation moves (most of) the hot head each phase
+    assert rows[1]["hot_overlap_prev"] < 0.5
+    assert rows[2]["hot_overlap_phase0"] < 0.5
+
+
+def test_rotate_by_full_table_is_identity_rotation():
+    n = SPEC.n_pages
+    s = datagen.PhaseShiftSampler(SPEC, rotate_by=n, seed=0)
+    np.testing.assert_array_equal(s.true_top_k_pages(100, phase=0),
+                                  s.true_top_k_pages(100, phase=1))
+    st = datagen.trace_stats(SPEC, n_batches=5, phases=2, rotate_by=n)
+    assert st["phases"][1]["hot_overlap_prev"] == 1.0
+
+
+def test_rotate_by_beyond_n_pages_wraps():
+    n = SPEC.n_pages
+    k = 100
+    wrapped = datagen.PhaseShiftSampler(SPEC, rotate_by=n + 7, seed=0)
+    plain = datagen.PhaseShiftSampler(SPEC, rotate_by=7, seed=0)
+    for phase in (1, 2, 5):
+        np.testing.assert_array_equal(wrapped.true_top_k_pages(k, phase=phase),
+                                      plain.true_top_k_pages(k, phase=phase))
+    # sampling stays in-bounds and concentrates on the wrapped hot head
+    pages = wrapped.sample(20_000, phase=1)
+    assert pages.min() >= 0 and pages.max() < n
+    hot = set(wrapped.true_top_k_pages(k, phase=1).tolist())
+    assert np.isin(pages, list(hot)).mean() > 0.5
+
+
+def test_page_probabilities_rotate_with_the_phase():
+    n = SPEC.n_pages
+    s = datagen.PhaseShiftSampler(SPEC, rotate_by=n // 2, seed=0)
+    p0, p1 = s.page_probabilities(0), s.page_probabilities(1)
+    assert p0.sum() == pytest.approx(1.0)
+    assert p1.sum() == pytest.approx(1.0)
+    # same mass, rotated support: sorted spectra match, assignments differ
+    np.testing.assert_allclose(np.sort(p0), np.sort(p1))
+    assert not np.allclose(p0, p1)
+    # each phase's most probable page is that phase's top-1 page
+    assert int(np.argmax(p0)) == int(s.true_top_k_pages(1, phase=0)[0])
+    assert int(np.argmax(p1)) == int(s.true_top_k_pages(1, phase=1)[0])
+    # phase-0 probabilities match the base sampler's
+    np.testing.assert_allclose(
+        p0, datagen.ZipfPageSampler(SPEC, seed=0).page_probabilities())

@@ -1,0 +1,182 @@
+"""repro.hints unit tests: static table analysis, lookahead windows, the
+EWMA phase-change detector, and the HintPipeline's per-epoch refresh."""
+import numpy as np
+import pytest
+
+from repro.dlrm import datagen
+from repro.hints import (HintPipeline, LookaheadWindow, PhaseChangeDetector,
+                         StaticTableHints)
+
+SPEC = datagen.SMALL
+
+
+def layout(seed=0):
+    return datagen.ZipfPageSampler(SPEC, seed).rank_to_page
+
+
+# ------------------------------------------------------------ StaticTableHints
+def test_static_hints_follow_the_layout_popularity_order():
+    lay = layout()
+    h = StaticTableHints(SPEC, lay)
+    rank = h()
+    assert rank.shape == (SPEC.n_pages,) and rank.dtype == np.float32
+    assert rank[lay[0]] == pytest.approx(1.0)       # hottest page ranks 1.0
+    by_popularity = rank[lay]                        # ranks in popularity order
+    assert (np.diff(by_popularity) <= 0).all()       # monotone non-increasing
+    assert (rank >= 0).all() and (rank <= 1.0).all()
+
+
+def test_static_hints_aggregate_row_aliasing():
+    """Page weight is the sum of the rows_per_page row priors aliased into
+    the page — the rank-1 row dominates its page, so the aggregated head is
+    *steeper* than a raw page-level Zipf and the #2/#1 ratio is exactly the
+    row-sum ratio."""
+    rpp = SPEC.rows_per_page
+    assert rpp > 1
+    lay = layout()
+    rank = StaticTableHints(SPEC, lay)()
+    row_w = np.arange(1, 2 * rpp + 1, dtype=np.float64) ** (-SPEC.alpha)
+    expected = row_w[rpp:].sum() / row_w[:rpp].sum()
+    assert rank[lay[1]] == pytest.approx(expected, rel=1e-5)
+    assert rank[lay[1]] < 2.0 ** (-SPEC.alpha)
+
+
+def test_static_hints_clip_zeroes_the_tail():
+    lay = layout()
+    rank = StaticTableHints(SPEC, lay, clip_rank=100)()
+    assert (rank[lay[:100]] > 0).all()
+    assert (rank[lay[100:]] == 0).all()
+
+
+def test_static_hints_reject_bad_layout_shape():
+    with pytest.raises(ValueError, match="rank_to_page"):
+        StaticTableHints(SPEC, np.arange(10))
+
+
+def test_static_hints_reject_clipping_every_hint():
+    """clip_rank=0 would make the normalization 0/0 (an all-NaN rank)."""
+    with pytest.raises(ValueError, match="clip_rank"):
+        StaticTableHints(SPEC, layout(), clip_rank=0)
+
+
+# ------------------------------------------------------------ LookaheadWindow
+def test_lookahead_empty_queue_ranks_zero():
+    w = LookaheadWindow(64, depth=2)
+    assert (w.rank(()) == 0).all()
+    assert w.rank(()).shape == (64,)
+
+
+def test_lookahead_ranks_by_window_histogram():
+    w = LookaheadWindow(8, depth=1)
+    batches = np.array([[0, 0, 0, 1, 1, 2]])
+    r = w.rank((batches,))
+    assert r[0] == pytest.approx(1.0)
+    assert r[1] == pytest.approx(2 / 3)
+    assert r[2] == pytest.approx(1 / 3)
+    assert (r[3:] == 0).all()
+
+
+def test_lookahead_depth_bounds_the_window():
+    w = LookaheadWindow(8, depth=1)
+    near = np.array([[0, 0]])
+    far = np.array([[5, 5, 5, 5]])
+    r = w.rank((near, far))
+    assert r[5] == 0.0                   # beyond depth: invisible
+    assert r[0] == pytest.approx(1.0)
+
+
+def test_lookahead_decay_discounts_farther_epochs():
+    w = LookaheadWindow(8, depth=2, decay=0.5)
+    r = w.rank((np.array([[0, 0]]), np.array([[1, 1]])))
+    assert r[0] == pytest.approx(1.0)
+    assert r[1] == pytest.approx(0.5)    # same count, one epoch farther out
+
+
+def test_lookahead_rejects_nonpositive_depth():
+    with pytest.raises(ValueError, match="depth"):
+        LookaheadWindow(8, depth=0)
+
+
+# ------------------------------------------------------- PhaseChangeDetector
+def _epoch(sampler, phase, batches=3, lookups=5_000):
+    return np.stack([sampler.sample(lookups, phase=phase)
+                     for _ in range(batches)])
+
+
+def test_detector_stationary_stream_keeps_full_scale():
+    s = datagen.PhaseShiftSampler(SPEC, rotate_by=SPEC.n_pages // 2, seed=0)
+    det = PhaseChangeDetector(SPEC.n_pages)
+    for _ in range(5):
+        scale = det.update(_epoch(s, phase=0))
+    assert scale == 1.0 and det.shifts_detected == 0
+
+
+def test_detector_flags_rotation_once_and_downweights():
+    s = datagen.PhaseShiftSampler(SPEC, rotate_by=SPEC.n_pages // 2, seed=0)
+    det = PhaseChangeDetector(SPEC.n_pages, penalty=0.25)
+    for _ in range(3):
+        det.update(_epoch(s, phase=0))
+    for _ in range(3):
+        scale = det.update(_epoch(s, phase=1))
+    assert det.shifts_detected == 1          # one rotation, detected once
+    assert scale == pytest.approx(0.25)      # no recovery to the stale prior
+
+
+def test_detector_counts_each_rotation():
+    s = datagen.PhaseShiftSampler(SPEC, rotate_by=SPEC.n_pages // 3, seed=0)
+    det = PhaseChangeDetector(SPEC.n_pages, penalty=0.5)
+    for phase in (0, 0, 1, 1, 2, 2):
+        det.update(_epoch(s, phase=phase))
+    assert det.shifts_detected == 2
+    assert det.scale == pytest.approx(0.25)
+
+
+# --------------------------------------------------------------- HintPipeline
+def test_pipeline_epoch_ranks_shapes_and_ranges():
+    pipe = HintPipeline.for_dlrm(SPEC, seed=0)
+    s = datagen.PhaseShiftSampler(SPEC, seed=0)
+    hr, pr = pipe.epoch_ranks(_epoch(s, 0), (_epoch(s, 0),))
+    for arr in (hr, pr):
+        assert arr.shape == (SPEC.n_pages,) and arr.dtype == np.float32
+        assert (arr >= 0).all() and (arr <= 1).all()
+    assert pr.max() == pytest.approx(1.0)    # lookahead window non-empty
+    assert pipe.lookahead_depth == 1
+
+
+def test_pipeline_scales_static_hints_after_detected_shift():
+    pipe = HintPipeline.for_dlrm(SPEC, seed=0)
+    s = datagen.PhaseShiftSampler(SPEC, rotate_by=SPEC.n_pages // 2, seed=0)
+    hr0, _ = pipe.epoch_ranks(_epoch(s, 0))
+    pipe.epoch_ranks(_epoch(s, 0))
+    hr_shift, _ = pipe.epoch_ranks(_epoch(s, 1))
+    assert pipe.static_scale < 1.0
+    nz = hr0 > 0
+    np.testing.assert_allclose(hr_shift[nz] / hr0[nz], pipe.static_scale,
+                               rtol=1e-5)
+
+
+def test_pipeline_reuses_static_rank_object_until_scale_moves():
+    """epoch_ranks returns the SAME hint_rank object while the detector
+    scale is unchanged, so the runtime's identity check can skip re-uploading
+    an n-block array every epoch."""
+    pipe = HintPipeline.for_dlrm(SPEC, seed=0)
+    s = datagen.PhaseShiftSampler(SPEC, rotate_by=SPEC.n_pages // 2, seed=0)
+    hr1, _ = pipe.epoch_ranks(_epoch(s, 0))
+    hr2, _ = pipe.epoch_ranks(_epoch(s, 0))
+    assert hr1 is hr2
+    hr3, _ = pipe.epoch_ranks(_epoch(s, 1))      # rotation -> new scale
+    assert hr3 is not hr2
+    hr4, _ = pipe.epoch_ranks(_epoch(s, 1))      # stationary again -> cached
+    assert hr4 is hr3
+
+
+def test_pipeline_without_providers_is_inert():
+    pipe = HintPipeline(32)
+    hr, pr = pipe.epoch_ranks(np.zeros((1, 4), np.int32))
+    assert (hr == 0).all() and (pr == 0).all()
+    assert pipe.lookahead_depth == 0 and pipe.static_scale == 1.0
+
+
+def test_pipeline_rejects_wrong_static_shape():
+    with pytest.raises(ValueError, match="static"):
+        HintPipeline(32, static=np.zeros(8, np.float32))

@@ -124,3 +124,21 @@ def test_coldest_victims_n_exceeds_occupancy_pads_with_minus_one():
     vic = np.asarray(policy.coldest_victims(est, s2b, n=3))
     assert int(vic[0]) == 2
     assert (vic[1:] == -1).all()
+
+
+# ------------------------------------------------------------------ prefetch
+def test_prefetch_promotes_window_blocks_heaviest_first():
+    rank = jnp.asarray([0.0, 0.5, 1.0, 0.0, 0.25])
+    plan = policy.prefetch(rank, k=5)
+    assert ids_of(plan) == [2, 1, 4]      # rank order; rank-0 never promoted
+
+
+def test_prefetch_empty_window_is_noop():
+    plan = policy.prefetch(jnp.zeros((6,)), k=4)
+    assert ids_of(plan) == []
+
+
+def test_prefetch_k_caps_promotion():
+    rank = jnp.asarray([0.9, 0.8, 0.7, 0.6])
+    plan = policy.prefetch(rank, k=2)
+    assert ids_of(plan) == [0, 1]

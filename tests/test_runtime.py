@@ -222,7 +222,8 @@ def test_fused_epoch_is_two_dispatches_and_one_trace():
         rt.step(rng.integers(0, n, (3, 1000)).astype(np.int32))
     delta = {k: rtmod.DISPATCH_COUNTS[k] - before[k]
              for k in rtmod.DISPATCH_COUNTS}
-    assert delta == {"observe_all": 3, "epoch_step": 3, "reference": 0}
+    assert delta == {"observe_all": 3, "epoch_step": 3, "reference": 0,
+                     "hint_refresh": 0}
     assert rtmod.TRACE_COUNTS["epoch_step"] == traces_before  # no re-trace
 
 
@@ -254,8 +255,10 @@ def test_sharded_observe_all_and_epoch_step_parity():
         from repro.launch.mesh import make_telemetry_mesh, use_mesh
 
         spec = dataclasses.replace(datagen.SMALL, lookups_per_batch=8_000)
+        # hints=True also proves the sharded per-epoch hint refresh
+        # (device_put with the mesh sharding) stays bit-identical
         kw = dict(spec=spec, n_epochs=4, batches_per_epoch=2, shift_at=2,
-                  seed=0)
+                  seed=0, hints=True)
         ref = tracesim.run_online(**kw)
         mesh = make_telemetry_mesh(8)
         with use_mesh(mesh):
@@ -298,6 +301,120 @@ def test_paper_scale_sharded_online_run():
         print("OK")
     """ % (list(ALL_POLICIES),))
     assert "OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+
+
+# ------------------------------------------------- hints + prefetch lane
+def _hints_run(fused: bool, spec, n_epochs=6, batches_per_epoch=3,
+               shift_at=3, prefetch_overlap=1.0, **kw):
+    """Phase-shift run with a fresh default HintPipeline (pipelines are
+    stateful, so every runtime gets its own)."""
+    from repro.hints import HintPipeline
+
+    n = spec.n_pages
+    rt = EpochRuntime(n, fused=fused, policies=ALL_POLICIES,
+                      bytes_per_access=spec.row_bytes,
+                      block_bytes=spec.page_bytes,
+                      hints=HintPipeline.for_dlrm(spec, seed=0),
+                      prefetch_overlap=prefetch_overlap, **kw)
+    traj = rt.run(datagen.phase_shift_epochs(
+        spec, n_epochs=n_epochs, batches_per_epoch=batches_per_epoch,
+        shift_at=shift_at, rotate_by=n // 2, seed=0))
+    return rt, traj
+
+
+def test_fused_step_bit_identical_with_hint_pipeline():
+    """Tentpole acceptance: with the HintPipeline refreshing hint_rank /
+    prefetch_rank every epoch, every EpochRecord field of all SIX lanes —
+    including the prefetch lane's overlap-accounted time and hidden_s —
+    matches the reference path bit for bit, as do the final placements."""
+    spec = dataclasses.replace(datagen.SMALL, lookups_per_batch=20_000)
+    kw = dict(k_hot=250, pebs_period=401, nb_scan_rate=spec.n_pages // 4)
+    rt_f, tf = _hints_run(True, spec, **kw)
+    rt_r, tr = _hints_run(False, spec, **kw)
+    assert len(ALL_POLICIES) == 6 and "prefetch" in ALL_POLICIES
+    for lane in ALL_POLICIES:
+        for a, b in zip(tf.lane(lane), tr.lane(lane)):
+            assert a.to_dict() == b.to_dict(), (lane, a.epoch)
+    lanes_f, lanes_r = rt_f.lanes, rt_r.lanes
+    for name in ALL_POLICIES:
+        np.testing.assert_array_equal(lanes_f[name].slot_to_block,
+                                      lanes_r[name].slot_to_block)
+
+
+def test_hint_enabled_fused_epoch_is_still_two_dispatches():
+    """ISSUE acceptance: the per-epoch hint refresh is a state-leaf transfer
+    (DISPATCH_COUNTS['hint_refresh']), not a dispatch — a prefetch-enabled
+    epoch stays at observe_all + epoch_step, on one re-used trace."""
+    from repro.hints import HintPipeline, LookaheadWindow
+
+    n = 512
+    rng = np.random.default_rng(0)
+
+    def epoch():
+        return rng.integers(0, n, (3, 1000)).astype(np.int32)
+
+    rt = EpochRuntime(n, 64, policies=ALL_POLICIES, pebs_period=97,
+                      nb_scan_rate=128,
+                      hints=HintPipeline(n, lookahead=LookaheadWindow(n)))
+    rt.step(epoch(), lookahead=(epoch(),))        # warm the trace
+    before = {**rtmod.DISPATCH_COUNTS}
+    traces_before = rtmod.TRACE_COUNTS["epoch_step"]
+    for _ in range(3):
+        rt.step(epoch(), lookahead=(epoch(),))
+    delta = {k: rtmod.DISPATCH_COUNTS[k] - before[k]
+             for k in rtmod.DISPATCH_COUNTS}
+    assert delta == {"observe_all": 3, "epoch_step": 3, "reference": 0,
+                     "hint_refresh": 3}
+    assert rtmod.TRACE_COUNTS["epoch_step"] == traces_before  # no re-trace
+
+
+def test_prefetch_beats_static_hinted_on_post_shift_coverage():
+    """ISSUE acceptance: on the phase-shift trajectory the lookahead-driven
+    prefetch lane beats the static hinted lane on hot-set coverage — the
+    lookahead covers the rotation in the very epoch it happens, while the
+    static table prior goes stale (and gets down-weighted)."""
+    spec = dataclasses.replace(datagen.SMALL, lookups_per_batch=20_000)
+    shift_at = 3
+    rt, traj = _hints_run(True, spec, shift_at=shift_at, k_hot=250,
+                          pebs_period=401, nb_scan_rate=spec.n_pages // 4)
+    pre_cov = np.array([r.coverage for r in traj.lane("prefetch")])
+    hin_cov = np.array([r.coverage for r in traj.lane("hinted")])
+    assert pre_cov[shift_at:].mean() > hin_cov[shift_at:].mean() + 0.2
+    assert pre_cov[shift_at] > 0.9        # covered in the shift epoch itself
+    assert rt.hints.detector.shifts_detected == 1
+
+
+def test_prefetch_overlap_time_no_worse_than_stop_the_world():
+    """ISSUE acceptance: the prefetch lane's overlap-accounted epoch time is
+    no worse than non-overlapped migration in every epoch (and strictly
+    better once it migrates), with everything else unchanged."""
+    spec = dataclasses.replace(datagen.SMALL, lookups_per_batch=20_000)
+    kw = dict(k_hot=250, pebs_period=401, nb_scan_rate=spec.n_pages // 4)
+    _, t_ov = _hints_run(True, spec, prefetch_overlap=1.0, **kw)
+    _, t_st = _hints_run(True, spec, prefetch_overlap=0.0, **kw)
+    ov, st = t_ov.times("prefetch"), t_st.times("prefetch")
+    assert (ov <= st).all(), (ov, st)
+    assert ov.sum() < st.sum()
+    hidden = np.array([r.hidden_s for r in t_ov.lane("prefetch")])
+    np.testing.assert_allclose(st - ov, hidden, rtol=1e-9)
+    assert all(r.hidden_s == 0.0 for r in t_st.lane("prefetch"))
+    # the overlap knob touches nothing but the prefetch lane's accounting
+    for lane in ALL_POLICIES[:-1]:
+        for a, b in zip(t_ov.lane(lane), t_st.lane(lane)):
+            assert a.to_dict() == b.to_dict(), (lane, a.epoch)
+
+
+def test_prefetch_without_pipeline_stays_idle():
+    """No hint pipeline -> empty lookahead window -> the prefetch lane never
+    promotes (no churn from an absent compiler)."""
+    n = 400
+    rt = EpochRuntime(n, 50, policies=("prefetch",), nb_scan_rate=100)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        rt.step(rng.integers(0, n, (2, 2000)).astype(np.int32))
+    recs = rt.records["prefetch"]
+    assert all(r.promoted == 0 and r.resident == 0 for r in recs)
+    assert all(r.host_events == 0.0 for r in recs)
 
 
 # ------------------------------------------------- phase-shift acceptance
