@@ -4,9 +4,12 @@ are live per token; the router's expert counters ARE memory-side telemetry
 (full coverage, zero extra cost), so hot experts can live in HBM and cold
 ones in the capacity tier.
 
-Runs the reduced Kimi-style MoE, collects per-layer expert counts from the
-forward pass, plans placement per telemetry source, and models decode-time
-expert-weight fetch cost.
+Part 1 sizes the opportunity offline (traffic share, modeled fetch time).
+Part 2 places the expert banks ONLINE through the workload-agnostic scenario
+layer: ``repro.scenarios.MoEExpertScenario`` turns the router's per-epoch
+counters into EpochRuntime access batches and ``run_scenario`` drives all
+six policy lanes over a mid-run routing shift — the same runtime, epoch
+loop, and dispatch accounting as the DLRM and KV-cache workloads.
 
     PYTHONPATH=src python examples/expert_tiering_moe.py
 """
@@ -21,14 +24,14 @@ import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.core import TPU_V5E_SYSTEM
-from repro.core.metrics import accuracy, true_top_k
+from repro.core.metrics import true_top_k
 from repro.models.model import forward, init_params
 
 cfg = get_smoke_config("kimi-k2-1t-a32b")
 params = init_params(cfg, jax.random.key(0))
 rng = np.random.default_rng(0)
 
-# skewed token stream (popular tokens route to the same experts)
+# ---- part 1: size the opportunity (skewed token stream -> skewed routing)
 fwd = jax.jit(lambda p, t: forward(p, cfg, tokens=t)[1]["expert_counts"])
 counts = np.zeros((cfg.n_layers, cfg.moe.n_experts), np.int64)
 for _ in range(16):
@@ -59,55 +62,36 @@ print(f"modeled expert-weight fetch: tiered={t_tier*1e6:.0f}us "
 print(f"=> {t_host/t_tier:.1f}x faster than full offload, "
       f"{bytes_per_expert*(e-k_fast)/1e6:.0f} MB of HBM freed per layer")
 
-# ---- online epoch runtime: routing mix shifts mid-run (new traffic pattern
-# routes to different experts).  The router's per-epoch counters feed the
-# EpochRuntime; proactive/EWMA re-promotes the new hot experts within an
-# epoch while NB-style recency tracking lags.
-from repro.core.runtime import EpochRuntime                     # noqa: E402
+# ---- part 2: online epoch placement via the scenario layer.  The routing
+# mix shifts mid-run (token popularity rotates -> different experts hot);
+# per-epoch frequency tracking (proactive/EWMA) re-promotes the new hot
+# experts within an epoch while NB-style cumulative recency lags.
+from repro.scenarios import MoEExpertScenario, run_scenario   # noqa: E402
 
-N_EPOCHS, BATCHES_PER_EPOCH, SHIFT_AT = 6, 4, 3
 LANES = ("proactive_ewma", "nb_two_touch")
-rt = EpochRuntime(
-    e, k_hot=k_fast, policies=LANES, system=TPU_V5E_SYSTEM,
-    bytes_per_access=bytes_per_expert,
-    block_bytes=bytes_per_expert * cfg.n_layers,
-    nb_scan_rate=max(e // 2, 1),
-    ewma_alpha=0.9,     # few experts -> little history needed; adapt fast
-)
-
-
-def expert_stream(shift: bool) -> np.ndarray:
-    """One batch's expert-access stream from the router (layer-summed)."""
-    zipf = np.minimum(rng.zipf(1.3, size=(4, 64)) - 1, cfg.vocab_size - 1)
-    if shift:   # rotate token popularity -> different experts become hot
-        zipf = (zipf + cfg.vocab_size // 2) % cfg.vocab_size
-    c = np.asarray(fwd(params, jnp.asarray(zipf, jnp.int32))).sum(0)
-    return np.repeat(np.arange(e), c)       # constant length: tokens*top_k*L
-
-
-print(f"\nonline expert tiering: {N_EPOCHS} epochs, routing shift at "
-      f"epoch {SHIFT_AT} (modeled fetch us / placement accuracy)")
-for ep in range(N_EPOCHS):
-    epoch = np.stack([expert_stream(ep >= SHIFT_AT)
-                      for _ in range(BATCHES_PER_EPOCH)])
-    recs = rt.step(epoch)
+scenario = MoEExpertScenario(n_epochs=6, batches_per_epoch=4, shift_at=3,
+                             seed=3)
+SHIFT_AT = scenario.shift_at
+print(f"\nonline expert tiering (scenario='{scenario.name}', "
+      f"{scenario.n_blocks} expert banks, k_hot={scenario.k_hot}): "
+      f"{scenario.n_epochs} epochs, routing shift at epoch {SHIFT_AT}")
+# few experts -> little history needed; adapt fast
+out = run_scenario(scenario, policies=LANES, ewma_alpha=0.9)
+lanes = out["trajectory"]["lanes"]
+for ep in range(scenario.n_epochs):
     mark = "<- shift" if ep == SHIFT_AT else ""
     print(f"  epoch {ep}: " + "  ".join(
-        f"{n}={recs[n].time_s*1e6:7.0f}us/acc={recs[n].accuracy:.2f}"
+        f"{n}={lanes[n][ep]['time_s']*1e6:7.0f}us"
+        f"/acc={lanes[n][ep]['accuracy']:.2f}"
         for n in LANES) + f"  {mark}")
-traj = rt.trajectory()
-pro, nb = traj.times("proactive_ewma"), traj.times("nb_two_touch")
 
-
-def recovery(lane):
-    acc = [r.accuracy for r in traj.lane(lane)][SHIFT_AT:]
-    hits = [i for i, a in enumerate(acc) if a >= 0.5]
-    return hits[0] if hits else None
-
-
-print(f"=> post-shift mean fetch: proactive={float(pro[SHIFT_AT:].mean())*1e6:.0f}us "
-      f"nb={float(nb[SHIFT_AT:].mean())*1e6:.0f}us; recovery to >=50% placement "
-      f"accuracy: proactive={recovery('proactive_ewma')} epochs "
-      f"nb={recovery('nb_two_touch')} epochs "
+s = out["summary"]
+print(f"=> post-shift mean fetch: "
+      f"proactive={s['proactive_ewma']['post_shift_mean_time_us']:.0f}us "
+      f"nb={s['nb_two_touch']['post_shift_mean_time_us']:.0f}us "
+      f"({s['proactive_vs_nb_post_shift']:.2f}x); recovery to >=50% "
+      f"placement accuracy: "
+      f"proactive={s['proactive_ewma']['post_shift_recovery_epochs']} epochs "
+      f"nb={s['nb_two_touch']['post_shift_recovery_epochs']} epochs "
       f"(at {e} experts both signals are cheap — the gap widens with scale; "
       f"see dlrm_tiering.py at 16k pages)")

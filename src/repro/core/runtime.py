@@ -55,13 +55,16 @@ batch queue, EWMA phase-change re-weighting) produce fresh ``hint_rank`` /
 a host-to-device transfer counted in ``DISPATCH_COUNTS["hint_refresh"]``,
 *not* a third dispatch.  The ``prefetch`` lane promotes blocks the lookahead
 says the next epoch will touch, before the accesses land; its boundary
-migration therefore streams concurrently with the epoch it serves, accounted
-via ``MemSystem.overlapped_epoch_time_s`` (the migration issued at the
-*previous* boundary is charged against the epoch it overlapped, its hidden
-share recorded in ``EpochRecord.hidden_s``).
+migration therefore streams concurrently with the epoch it serves, charged
+component-wise in ``_record`` (access + migration - hidden overlap) —
+equivalent to ``MemSystem.overlapped_epoch_time_s``, parity-tested in
+``test_core_tiering`` — with the migration issued at the *previous* boundary
+charged against the epoch it overlapped and its hidden share recorded in
+``EpochRecord.hidden_s``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import json
@@ -80,6 +83,7 @@ from .placement import Placement, apply_plan, demote_idle
 
 __all__ = [
     "ALL_POLICIES", "DISPATCH_COUNTS", "TRACE_COUNTS",
+    "Counters", "counting",
     "EpochRecord", "EpochRuntime", "Trajectory",
 ]
 
@@ -105,6 +109,40 @@ HMU_DRAIN_COST_S = 2e-9
 TRACE_COUNTS = {"epoch_step": 0}
 DISPATCH_COUNTS = {"observe_all": 0, "epoch_step": 0, "reference": 0,
                    "hint_refresh": 0}
+
+
+class Counters(NamedTuple):
+    """The live counter dicts a :func:`counting` block observes (zeroed at
+    entry): per-call dispatches, epoch_step traces, and the telemetry
+    module's observe_all traces."""
+    dispatch: Dict[str, int]
+    trace: Dict[str, int]
+    observe_trace: Dict[str, int]
+
+
+@contextlib.contextmanager
+def counting():
+    """Scoped view of the dispatch/trace counters.
+
+    ``DISPATCH_COUNTS``, ``TRACE_COUNTS`` and ``telemetry.TRACE_COUNTS`` are
+    module-level mutable dicts, so raw reads leak activity across tests and
+    benchmark runs.  Inside a ``with counting() as c:`` block all three are
+    zeroed in place (every runtime keeps ticking the same dict objects, so
+    ``c.dispatch`` etc. show exactly the block's activity); on exit the
+    pre-entry totals are added back, so outer accounting stays monotonic and
+    nested/concurrent readers outside the block never see counts vanish.
+    """
+    managed = (DISPATCH_COUNTS, TRACE_COUNTS, tel.TRACE_COUNTS)
+    saved = [dict(d) for d in managed]
+    for d in managed:
+        for key in d:
+            d[key] = 0
+    try:
+        yield Counters(*managed)
+    finally:
+        for d, before in zip(managed, saved):
+            for key, val in before.items():
+                d[key] = d.get(key, 0) + val
 
 
 @dataclasses.dataclass
@@ -465,6 +503,30 @@ class EpochRuntime:
             self._prev_hmu = np.zeros((n_blocks,), np.int64)
             self._prev_pebs = np.zeros((n_blocks,), np.int64)
 
+    # ---------------------------------------------------------- constructors
+    @classmethod
+    def for_scenario(cls, scenario, *, policies: Sequence[str] = ALL_POLICIES,
+                     hints=None, prefetch_overlap: float = 1.0,
+                     fused: bool = True, mesh=None, mesh_axis: str = "blocks",
+                     **overrides) -> "EpochRuntime":
+        """Build a runtime from an :class:`repro.scenarios.AccessScenario`'s
+        geometry and cost-model parameters — the scenario supplies what the
+        DLRM-shaped callers used to hand-wire (block count, hot-set size,
+        per-access and per-block byte sizes, collector rates, memory system).
+        ``overrides`` replace any constructor kwarg (e.g. ``ewma_alpha=``)."""
+        kw = dict(
+            policies=policies,
+            system=scenario.system,
+            bytes_per_access=scenario.bytes_per_access,
+            block_bytes=scenario.block_bytes,
+            pebs_period=scenario.pebs_period,
+            nb_scan_rate=scenario.nb_scan_rate,
+            hints=hints, prefetch_overlap=prefetch_overlap,
+            fused=fused, mesh=mesh, mesh_axis=mesh_axis,
+        )
+        kw.update(overrides)
+        return cls(scenario.n_blocks, scenario.k_hot, **kw)
+
     # ------------------------------------------------------- state accessors
     @property
     def lanes(self) -> Dict[str, _Lane]:
@@ -766,7 +828,14 @@ class EpochRuntime:
         """Drive a whole epoch stream.  With a hint pipeline attached, the
         stream is buffered by the pipeline's lookahead depth so each ``step``
         sees the queued next epochs — the dataloader's prefetch queue, which
-        is what the lookahead provider models."""
+        is what the lookahead provider models.
+
+        Each ``run`` is one workload: the prefetch lane's pending boundary
+        migration is cleared on entry, so a runtime reused for a second
+        ``run`` does not charge the previous stream's final boundary (already
+        surfaced via :attr:`pending_migration_s`) against the new stream's
+        first epoch."""
+        self._prefetch_pending = 0
         depth = self.hints.lookahead_depth if self.hints is not None else 0
         it = iter(epochs)
         buf: deque = deque()                # current epoch + queued lookahead

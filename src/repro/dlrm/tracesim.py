@@ -8,6 +8,9 @@
   policies (incl. the hint-fed ``hinted``/``prefetch`` lanes when
   ``hints=True``) over a phase-shifting DLRM trace and returns the per-epoch
   trajectory (time / accuracy / coverage series instead of one end state).
+  Since the scenario-layer refactor this is a thin re-export of
+  :func:`repro.scenarios.dlrm.run_online` — the DLRM packaging of the
+  workload-agnostic :func:`repro.scenarios.run_scenario` driver.
 
 Both run at full paper scale (5.24 M / 2.62 M pages) as *trace* sims: no 20 GB
 table is allocated, only per-page counters — exactly the device-side view the
@@ -36,7 +39,6 @@ PEBS is handicapped only by its sampling period (coverage), per the paper.
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import Dict, Optional
 
 import numpy as np
@@ -44,7 +46,7 @@ import numpy as np
 from ..core import metrics, telemetry as tel
 from ..core.costmodel import CXL_SYSTEM, MemSystem
 from ..core.manager import TieringManager
-from ..core.runtime import ALL_POLICIES, EpochRuntime
+from ..scenarios.dlrm import run_online  # noqa: F401  (thin re-export)
 from ..workloads import mmap_bench
 from . import datagen
 
@@ -319,95 +321,5 @@ def run_fig3(
 
 
 # =====================================================================  online
-def run_online(
-    spec: datagen.DLRMTraceSpec = datagen.SMALL,
-    system: MemSystem = CXL_SYSTEM,
-    n_epochs: int = 8,
-    batches_per_epoch: int = 4,
-    shift_at: int = 4,
-    k_hot: Optional[int] = None,
-    policies: tuple = ALL_POLICIES,
-    pebs_period: int = 401,
-    rotate_by: Optional[int] = None,
-    seed: int = 0,
-    hints=False,
-    lookahead_depth: int = 1,
-    prefetch_overlap: float = 1.0,
-    fused: bool = True,
-    mesh=None,
-) -> dict:
-    """§VI online regime: multi-epoch phase-shifting DLRM trace through the
-    EpochRuntime.  The hot set rotates at ``shift_at``; the trajectory shows
-    which telemetry/policy pairs re-converge and which collapse (NB).
-
-    ``hints=True`` attaches the default :class:`repro.hints.HintPipeline`
-    for the spec (static table analysis + ``lookahead_depth`` epochs of
-    lookahead + phase-change re-weighting) so the hinted lane runs on
-    compiler-derived ranks and the prefetch lane is live; a pre-built
-    pipeline may be passed instead.  ``prefetch_overlap`` is how much of the
-    prefetch lane's migration streams under the epoch it serves.
-
-    ``fused`` selects the device-resident two-dispatch epoch loop (default)
-    or the per-lane reference path; ``mesh`` (see
-    ``launch.mesh.make_telemetry_mesh``) shards all per-page state across
-    devices for paper-scale (5.24 M page) trajectories.
-
-    Returns ``{"trajectory": per-epoch dict, "summary": headline numbers}``.
-    """
-    n_pages = spec.n_pages
-    k = min(k_hot if k_hot is not None else max(n_pages // 20, 1), n_pages)
-    if hints is True:
-        from ..hints import HintPipeline
-        # layout from the same sampler the trace below uses, so the static
-        # hints point at the actual table layout by construction
-        layout = datagen.PhaseShiftSampler(
-            spec, rotate_by=rotate_by, seed=seed).rank_to_page
-        hints = HintPipeline.for_dlrm(spec, seed=seed, depth=lookahead_depth,
-                                      layout=layout)
-    rt = EpochRuntime(
-        n_pages, k, policies=policies, system=system,
-        bytes_per_access=float(spec.row_bytes),
-        block_bytes=float(spec.page_bytes),
-        pebs_period=pebs_period,
-        nb_scan_rate=max(n_pages // batches_per_epoch, 1),
-        hints=hints or None, prefetch_overlap=prefetch_overlap,
-        fused=fused, mesh=mesh,
-    )
-    traj = rt.run(datagen.phase_shift_epochs(
-        spec, n_epochs=n_epochs, batches_per_epoch=batches_per_epoch,
-        shift_at=shift_at, rotate_by=rotate_by, seed=seed))
-
-    summary = {}
-    for name in policies:
-        ts = traj.times(name)
-        recs = traj.lane(name)
-        accs = np.array([r.accuracy for r in recs])
-        covs = np.array([r.coverage for r in recs])
-        post = slice(shift_at, None)
-        summary[name] = {
-            "mean_time_us": float(ts.mean() * 1e6),
-            "post_shift_mean_time_us": float(ts[post].mean() * 1e6),
-            "final_accuracy": float(accs[-1]),
-            "final_coverage": float(covs[-1]),
-            "post_shift_mean_coverage": float(covs[post].mean()),
-            "post_shift_recovery_epochs": int(np.argmax(
-                accs[post] >= 0.5)) if (accs[post] >= 0.5).any() else -1,
-            "hidden_s_total": float(sum(r.hidden_s for r in recs)),
-        }
-        if name == "prefetch":
-            # the final boundary's migration overlaps an epoch that never
-            # runs; report it so lane-total comparisons stay honest
-            summary[name]["pending_migration_us"] = float(
-                rt.pending_migration_s * 1e6)
-    if "proactive_ewma" in policies and "nb_two_touch" in policies:
-        summary["proactive_vs_nb_post_shift"] = float(
-            summary["nb_two_touch"]["post_shift_mean_time_us"]
-            / summary["proactive_ewma"]["post_shift_mean_time_us"])
-    if "prefetch" in policies and "hinted" in policies:
-        summary["prefetch_vs_hinted_post_shift_coverage"] = (
-            summary["prefetch"]["post_shift_mean_coverage"]
-            - summary["hinted"]["post_shift_mean_coverage"])
-    return {
-        "trajectory": json.loads(traj.to_json(shift_at=shift_at)),
-        "summary": summary,
-    }
+# run_online lives in repro.scenarios.dlrm (the DLRM packaging of the
+# workload-agnostic scenario driver); imported above for compatibility.

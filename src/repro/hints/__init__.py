@@ -8,9 +8,10 @@ into the :class:`~repro.core.runtime.EpochRuntime` every epoch without
 breaking its 2-dispatch/epoch invariant.
 """
 from .pipeline import HintPipeline
-from .providers import LookaheadWindow, PhaseChangeDetector, StaticTableHints
+from .providers import (HintLayout, LookaheadWindow, PhaseChangeDetector,
+                        StaticTableHints)
 
 __all__ = [
-    "HintPipeline", "LookaheadWindow", "PhaseChangeDetector",
+    "HintLayout", "HintPipeline", "LookaheadWindow", "PhaseChangeDetector",
     "StaticTableHints",
 ]

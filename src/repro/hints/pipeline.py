@@ -23,7 +23,8 @@ from typing import Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..dlrm.datagen import DLRMTraceSpec, ZipfPageSampler
-from .providers import LookaheadWindow, PhaseChangeDetector, StaticTableHints
+from .providers import (HintLayout, LookaheadWindow, PhaseChangeDetector,
+                        StaticTableHints)
 
 __all__ = ["HintPipeline"]
 
@@ -86,6 +87,35 @@ class HintPipeline:
         return hint_rank, prefetch_rank
 
     @staticmethod
+    def for_scenario(
+        layout: HintLayout,
+        depth: int = 1,
+        clip_rank: Optional[int] = None,
+        detector: bool = True,
+    ) -> "HintPipeline":
+        """Layout-driven default pipeline — the workload-agnostic form every
+        scenario uses (see :meth:`repro.scenarios.AccessScenario.hint_layout`):
+        static hints when the layout carries a ``rank_to_page`` map (a
+        compiler that laid the blocks out), ``depth`` epochs of lookahead
+        over the scenario's batch queue, and the phase detector.  A layout
+        without a ``rank_to_page`` (runtime-only hotness, e.g. a KV cache)
+        yields a lookahead-only pipeline: the hinted lane falls back to pure
+        telemetry while the prefetch lane stays live.  ``clip_rank`` defaults
+        to an eighth of the blocks — a compiler annotates the hot head only.
+        """
+        n = layout.n_blocks
+        static = None
+        if layout.rank_to_page is not None:
+            clip = max(n // 8, 1) if clip_rank is None else clip_rank
+            static = StaticTableHints(layout, clip_rank=clip)
+        return HintPipeline(
+            n,
+            static=static,
+            lookahead=LookaheadWindow(n, depth=depth),
+            detector=PhaseChangeDetector(n) if detector else None,
+        )
+
+    @staticmethod
     def for_dlrm(
         spec: DLRMTraceSpec,
         seed: int = 0,
@@ -94,21 +124,18 @@ class HintPipeline:
         detector: bool = True,
         layout: Optional[np.ndarray] = None,
     ) -> "HintPipeline":
-        """Default pipeline for a DLRM trace: static hints from the table
+        """Default pipeline for a DLRM trace — :meth:`for_scenario` on the
+        table's :class:`~repro.hints.HintLayout`: static hints from the table
         structure (``layout`` = the trace sampler's rank->page map — the
         compiler that laid the table out; pass the actual sampler's
         ``rank_to_page`` when you have it, e.g.
         ``PhaseShiftSampler.rank_to_page``, else the ``seed``'s
         :class:`ZipfPageSampler` layout is rebuilt here), one-epoch
-        lookahead, and the phase detector.  ``clip_rank`` defaults to an
-        eighth of the table — the compiler annotates the hot head only."""
-        n = spec.n_pages
+        lookahead, and the phase detector."""
         if layout is None:
             layout = ZipfPageSampler(spec, seed).rank_to_page
-        clip = max(n // 8, 1) if clip_rank is None else clip_rank
-        return HintPipeline(
-            n,
-            static=StaticTableHints(spec, layout, clip_rank=clip),
-            lookahead=LookaheadWindow(n, depth=depth),
-            detector=PhaseChangeDetector(n) if detector else None,
+        return HintPipeline.for_scenario(
+            HintLayout(spec.n_pages, rank_to_page=layout, alpha=spec.alpha,
+                       rows_per_page=spec.rows_per_page),
+            depth=depth, clip_rank=clip_rank, detector=detector,
         )

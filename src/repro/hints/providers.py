@@ -30,41 +30,80 @@ not a dispatch.
 """
 from __future__ import annotations
 
+import dataclasses
 import weakref
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
 from ..dlrm.datagen import DLRMTraceSpec
 
-__all__ = ["StaticTableHints", "LookaheadWindow", "PhaseChangeDetector",
-           "epoch_histogram"]
+__all__ = ["HintLayout", "StaticTableHints", "LookaheadWindow",
+           "PhaseChangeDetector", "epoch_histogram"]
 
 # One-entry memo: with depth-1 lookahead the SAME epoch array is histogrammed
 # twice — by the window at step e-1 (as lookahead) and by the detector at
 # step e.  Keyed by weakref identity so a freed-and-reused address can never
-# serve a stale histogram.
-_hist_memo = (None, 0, None)            # (weakref, n_blocks, hist)
+# serve a stale histogram, PLUS an O(1) content fingerprint so a dataloader
+# that refills one preallocated buffer in place (same object, new epoch)
+# invalidates the entry instead of silently replaying the old histogram
+# (which would blind the phase detector to a rotation).  The fingerprint
+# samples a fixed handful of elements — a refill that happens to match all
+# of them is vanishingly unlikely but not impossible, so callers that mutate
+# buffers in place and need a hard guarantee should pass fresh arrays.
+_hist_memo = (None, 0, None, None)      # (weakref, n_blocks, fingerprint, hist)
+
+
+def _fingerprint(arr: np.ndarray):
+    flat = arr.reshape(-1)
+    step = max(flat.size // 8, 1)
+    return (arr.shape, arr.dtype.str, flat[::step].tobytes(),
+            flat[-1:].tobytes())
 
 
 def epoch_histogram(batches: np.ndarray, n_blocks: int) -> np.ndarray:
     """Per-block float64 access histogram of one epoch's batches (ids outside
     [0, n_blocks) dropped).  Callers must not mutate the result."""
     global _hist_memo
-    ref, n, h = _hist_memo
-    if ref is not None and ref() is batches and n == n_blocks:
+    batches = np.asarray(batches)
+    ref, n, fp, h = _hist_memo
+    if (ref is not None and ref() is batches and n == n_blocks
+            and fp == _fingerprint(batches)):
         return h
-    h = np.bincount(np.asarray(batches).ravel(),
+    h = np.bincount(batches.ravel(),
                     minlength=n_blocks)[:n_blocks].astype(np.float64)
     try:
-        _hist_memo = (weakref.ref(batches), n_blocks, h)
+        _hist_memo = (weakref.ref(batches), n_blocks,
+                      _fingerprint(batches), h)
     except TypeError:                    # non-weakrefable input: skip memo
         pass
     return h
 
 
+@dataclasses.dataclass(frozen=True)
+class HintLayout:
+    """What a compiler knows *statically* about a scenario's block space.
+
+    The workload-agnostic contract between a scenario (see
+    :mod:`repro.scenarios`) and the hint providers: how many blocks there
+    are, which popularity rank the compiler laid out on which block
+    (``rank_to_page``), the skew of the popularity prior (``alpha``) and how
+    many sub-blocks alias into one block (``rows_per_page`` — embedding rows
+    per page for DLRM; 1 when blocks are the access granularity).
+
+    ``rank_to_page=None`` means the scenario has no static layout at all —
+    hotness is runtime-only, as for a KV cache whose per-page attention mass
+    depends on the decoded text.  Pipelines built from such a layout run
+    lookahead-only (:meth:`~repro.hints.HintPipeline.for_scenario`).
+    """
+    n_blocks: int
+    rank_to_page: Optional[np.ndarray] = None
+    alpha: float = 1.0
+    rows_per_page: int = 1
+
+
 class StaticTableHints:
-    """Per-page hint ranks from the embedding table's compile-time structure.
+    """Per-page hint ranks from a block space's compile-time structure.
 
     Page weight = sum of the row-level Zipf(alpha) prior over the
     ``rows_per_page`` rows aliased into that page (page-granular telemetry
@@ -72,21 +111,39 @@ class StaticTableHints:
     through ``rank_to_page`` (the layout: which popularity rank the compiler
     placed on which page) and normalized so the hottest page ranks 1.0.
 
+    The first argument is either a :class:`HintLayout` (the workload-agnostic
+    form the scenario layer uses) or a DLRM trace spec plus its
+    ``rank_to_page`` array (the original DLRM-shaped call, kept working).
+
     ``clip_rank`` keeps only the hottest ``clip_rank`` pages' hints and zeroes
     the tail — a compiler annotates the hot head, not five million pages.
     """
 
-    def __init__(self, spec: DLRMTraceSpec, rank_to_page: np.ndarray,
+    def __init__(self, spec: Union[DLRMTraceSpec, HintLayout],
+                 rank_to_page: Optional[np.ndarray] = None,
                  clip_rank: Optional[int] = None):
-        n = spec.n_pages
-        rank_to_page = np.asarray(rank_to_page)
+        if isinstance(spec, HintLayout):
+            if rank_to_page is not None:
+                raise ValueError("pass the layout's rank_to_page inside the "
+                                 "HintLayout, not as a second argument")
+            layout = spec
+        else:
+            layout = HintLayout(spec.n_pages, rank_to_page,
+                                alpha=spec.alpha,
+                                rows_per_page=spec.rows_per_page)
+        n = layout.n_blocks
+        if layout.rank_to_page is None:
+            raise ValueError("static hints need a rank_to_page layout; "
+                             "use a lookahead-only pipeline for scenarios "
+                             "without one")
+        rank_to_page = np.asarray(layout.rank_to_page)
         if rank_to_page.shape != (n,):
             raise ValueError(f"rank_to_page must be ({n},), "
                              f"got {rank_to_page.shape}")
         if clip_rank is not None and clip_rank < 1:
             raise ValueError(f"clip_rank must be >= 1 (clipping every hint "
                              f"makes the rank 0/0), got {clip_rank}")
-        rpp = max(spec.rows_per_page, 1)
+        rpp = max(layout.rows_per_page, 1)
         # row-level prior aggregated per page-popularity rank: the page with
         # popularity rank r aliases rows [r*rpp, (r+1)*rpp); accumulated one
         # row-offset at a time so paper-scale tables (n*rpp ~ 20M rows) never
@@ -94,12 +151,13 @@ class StaticTableHints:
         base = np.arange(n, dtype=np.float64) * rpp
         page_w = np.zeros((n,), np.float64)
         for j in range(1, rpp + 1):
-            page_w += (base + j) ** (-spec.alpha)
+            page_w += (base + j) ** (-layout.alpha)
         if clip_rank is not None:
             page_w[int(clip_rank):] = 0.0
         rank = np.zeros((n,), np.float32)
         rank[rank_to_page] = (page_w / page_w[0]).astype(np.float32)
         self.spec = spec
+        self.layout = layout
         self.rank = rank
 
     def __call__(self) -> np.ndarray:

@@ -155,8 +155,16 @@ def decode_step(
                      preferred_element_type=jnp.float32)
     out = out.reshape(b, h, d).astype(q.dtype)
     if page_size:
-        npages = s // page_size
-        mass = p.sum((1, 2)).reshape(b, npages, page_size).sum(-1)   # (B, npages)
+        # ceil-divide: a cache length that is not a page multiple leaves a
+        # ragged final page, whose mass is the (shorter) tail positions' sum —
+        # masked positions carry exactly 0 probability, so zero-padding the
+        # per-position mass to the page grid is exact, not an approximation
+        npages = -(-s // page_size)
+        pos_mass = p.sum((1, 2))                                     # (B, S)
+        pad = npages * page_size - s
+        if pad:
+            pos_mass = jnp.pad(pos_mass, ((0, 0), (0, pad)))
+        mass = pos_mass.reshape(b, npages, page_size).sum(-1)        # (B, npages)
         return out, mass
     return out
 

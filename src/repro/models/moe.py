@@ -28,8 +28,28 @@ from __future__ import annotations
 
 from typing import NamedTuple, Optional, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
+
+
+def expert_access_batch(counts) -> np.ndarray:
+    """Router telemetry -> the tiering runtime's access-batch format.
+
+    ``counts`` is the ``aux["counts"]`` expert-activation histogram from
+    :func:`moe_block` — ``(E,)`` for one layer or ``(L, E)`` stacked by the
+    forward scan (layers are summed: expert banks are placed per expert id,
+    one block spanning its weights in every layer).  Returns a flat int32
+    stream of expert ids with multiplicity — the per-batch access stream an
+    :class:`~repro.core.runtime.EpochRuntime` epoch stacks.  Its length is
+    ``tokens * top_k * n_layers`` regardless of how routing is distributed,
+    so every batch in an epoch has equal size by construction."""
+    c = np.asarray(counts)
+    if c.ndim == 2:
+        c = c.sum(0)
+    if c.ndim != 1:
+        raise ValueError(f"counts must be (E,) or (L, E), got {c.shape}")
+    return np.repeat(np.arange(c.shape[0], dtype=np.int32), c)
 
 
 def _ambient_mesh():

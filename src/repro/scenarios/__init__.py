@@ -1,0 +1,57 @@
+"""repro.scenarios — one EpochRuntime, many workloads.
+
+The paper's HMU argument is that *device-level* telemetry generalizes across
+workloads: the collector sees physical accesses, so the same
+observe -> decide -> migrate -> account loop should place a DLRM embedding
+table, an LLM KV cache, or a bank of MoE experts without knowing which it is
+(TPP and NeoMem make exactly this workload-generality the test of a tiering
+design).  This package is that claim made structural: the
+:class:`AccessScenario` protocol is everything a workload must provide — an
+epoch stream of block-index batches, the page geometry, the cost-model
+parameters, and optionally what a compiler knows statically
+(:class:`~repro.hints.HintLayout`) — and :func:`run_scenario` is the one
+packaging of the six-lane :class:`~repro.core.runtime.EpochRuntime` over any
+of them.
+
+Scenarios:
+
+* :class:`DLRMScenario` (``scenarios/dlrm.py``) — the phase-shifting Zipf
+  page trace; ``run_online`` (still re-exported from ``dlrm.tracesim``) is
+  its thin wrapper.
+* :class:`KVCacheScenario` (``scenarios/kv_cache.py``) — KV pages placed
+  from the serving engine's per-page attention-mass feed; the decode loop's
+  ``kv_page_mass`` telemetry becomes the access stream.
+* :class:`MoEExpertScenario` (``scenarios/moe_experts.py``) — expert banks
+  placed from router activation counters, replacing the old offline
+  ``TieringManager`` flow with online epoch placement.
+
+The runtime's invariants — fused vs reference bit-identity, exactly 2 jit
+dispatches per epoch (hint refreshes are state-leaf transfers), sharded
+parity — hold per scenario because the runtime is workload-blind; the
+benchmark harness records per-scenario coverage/accuracy rows
+(``results/BENCH_epoch_runtime.json``) and CI smoke-gates a non-DLRM
+scenario on the same 2-dispatch count.
+
+The model-backed scenarios import the model stack lazily (PEP 562), so
+trace-only users of ``run_online`` never pay for it.
+"""
+from .base import AccessScenario, build_hints, run_scenario, scenario_summary
+from .dlrm import DLRMScenario, run_online
+
+__all__ = [
+    "AccessScenario", "DLRMScenario", "KVCacheScenario", "MoEExpertScenario",
+    "build_hints", "run_online", "run_scenario", "scenario_summary",
+]
+
+_LAZY = {
+    "KVCacheScenario": "kv_cache",
+    "MoEExpertScenario": "moe_experts",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

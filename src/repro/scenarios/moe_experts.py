@@ -1,0 +1,135 @@
+"""MoE expert-bank scenario — online placement of expert weights.
+
+The paper's DLRM sparsity argument applied to expert weights: with top-k
+routing only a sliver of expert bytes is live per token, and the router's
+expert-activation counters ARE memory-side telemetry (full coverage, zero
+extra cost).  The old flow profiled offline with a ``TieringManager`` and
+batch-promoted once; this scenario replaces it with *online* epoch placement:
+the router counters from a real MoE forward pass become the EpochRuntime's
+access batches (via :func:`repro.models.moe.expert_access_batch`), and the
+six lanes place the expert banks epoch by epoch while the routing mix shifts
+mid-run (new traffic rotates token popularity, so different experts become
+hot — the regime where per-epoch frequency tracking re-converges and NB-style
+cumulative recency collapses).
+
+Blocks are expert ids; one block spans the expert's gate/up/down weights in
+every layer (``block_bytes = bytes_per_expert * n_layers``), matching how an
+inference server would pin an expert across its layer instances.  No static
+hint layout: which experts run hot depends on the serving traffic, not the
+compile-time graph.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from ..core.costmodel import TPU_V5E_SYSTEM, MemSystem
+from ..hints import HintLayout
+
+__all__ = ["MoEExpertScenario"]
+
+
+class MoEExpertScenario:
+    """Online expert-bank tiering from router telemetry.
+
+    The model (smoke config by default) runs one forward pass per batch of
+    Zipf-popular tokens; at epoch ``shift_at`` token popularity rotates by
+    half the vocabulary, re-routing traffic to different experts.  Each batch
+    row is the layer-summed expert access stream — constant length
+    ``batch * seq * top_k * n_layers`` by construction, so epochs stack.
+
+    The forward passes run once (fixed init key and token stream) and the
+    epochs are cached, so fused and reference runs replay identical streams.
+    """
+
+    name = "moe_experts"
+
+    def __init__(
+        self,
+        arch: str = "kimi-k2-1t-a32b",
+        n_epochs: int = 6,
+        batches_per_epoch: int = 4,
+        shift_at: int = 3,
+        batch: int = 4,
+        seq: int = 64,
+        zipf_a: float = 1.3,
+        k_hot: Optional[int] = None,
+        system: MemSystem = TPU_V5E_SYSTEM,
+        pebs_period: int = 101,
+        seed: int = 0,
+    ):
+        from ..configs import get_smoke_config
+
+        self.arch = arch
+        self.cfg = get_smoke_config(arch)
+        if self.cfg.family != "moe":
+            raise ValueError(f"expert tiering needs a MoE family arch, "
+                             f"got {arch!r} ({self.cfg.family})")
+        self.n_epochs = int(n_epochs)
+        self.batches_per_epoch = int(batches_per_epoch)
+        self.shift_at = int(shift_at)
+        self.batch = int(batch)
+        self.seq = int(seq)
+        self.zipf_a = float(zipf_a)
+        e = self.cfg.moe.n_experts
+        self.n_blocks = e
+        self.k_hot = (max(e // 4, 1) if k_hot is None
+                      else min(int(k_hot), e))       # HBM: 25% of experts
+        # gate/up/down bf16 per layer; a block is the expert across layers
+        bytes_per_expert = 3 * self.cfg.d_model * self.cfg.moe.d_expert * 2
+        self.bytes_per_access = float(bytes_per_expert)
+        self.block_bytes = float(bytes_per_expert * self.cfg.n_layers)
+        self.system = system
+        self.pebs_period = int(pebs_period)
+        self.nb_scan_rate = max(e // 2, 1)
+        self.seed = int(seed)
+        self._epochs: Optional[List[np.ndarray]] = None
+
+    @property
+    def batch_len(self) -> int:
+        """Every batch row's length: tokens * top_k * layers."""
+        return (self.batch * self.seq * self.cfg.moe.top_k
+                * self.cfg.n_layers)
+
+    # ------------------------------------------------------------- generation
+    def _token_batch(self, rng: np.random.Generator,
+                     shifted: bool) -> np.ndarray:
+        """Zipf-popular token ids; ``shifted`` rotates popularity so a
+        different expert subset becomes hot."""
+        v = self.cfg.vocab_size
+        toks = np.minimum(rng.zipf(self.zipf_a, size=(self.batch, self.seq))
+                          - 1, v - 1)
+        if shifted:
+            toks = (toks + v // 2) % v
+        return toks.astype(np.int32)
+
+    def _generate(self) -> List[np.ndarray]:
+        import jax
+        import jax.numpy as jnp
+        from ..models.model import forward, init_params
+        from ..models.moe import expert_access_batch
+
+        cfg = self.cfg
+        rng = np.random.default_rng(self.seed)
+        params = init_params(cfg, jax.random.key(self.seed))
+        counts_fn = jax.jit(
+            lambda p, t: forward(p, cfg, tokens=t)[1]["expert_counts"])
+        epochs = []
+        for ep in range(self.n_epochs):
+            rows = []
+            for _ in range(self.batches_per_epoch):
+                toks = self._token_batch(rng, shifted=ep >= self.shift_at)
+                counts = np.asarray(counts_fn(params, jnp.asarray(toks)))
+                rows.append(expert_access_batch(counts))      # (L,E) -> ids
+            epochs.append(np.stack(rows))
+        return epochs
+
+    # --------------------------------------------------------------- protocol
+    def epochs(self) -> Iterator[np.ndarray]:
+        if self._epochs is None:
+            self._epochs = self._generate()
+        return iter(self._epochs)
+
+    def hint_layout(self) -> Optional[HintLayout]:
+        return None          # routing hotness is runtime-only

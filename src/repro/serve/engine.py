@@ -343,6 +343,52 @@ def decode_step(params: dict, cfg: ModelConfig, cache: Cache,
     return logits, cache, aux
 
 
+def kv_page_geometry(cfg: ModelConfig, batch: int, max_len: int,
+                     page_size: int) -> Dict[str, int]:
+    """Page-space geometry of a tiered KV cache: how the decode loop's
+    ``kv_page_mass`` telemetry maps onto tiering blocks.
+
+    Each ``(layer, sequence, page)`` triple is one block — the unit the
+    serving engine can independently place in HBM or host memory.  Pages are
+    ceil-divided (``pages_per_seq``), so a ``max_len`` that is not a page
+    multiple gets a ragged final page.  ``bytes_per_access`` is one attended
+    position's K+V read; ``block_bytes`` one full page of K+V."""
+    if cfg.family not in ("attn", "moe"):
+        raise ValueError(f"kv_page_mass telemetry needs a KV cache; "
+                         f"family {cfg.family!r} has none")
+    pages_per_seq = -(-max_len // page_size)
+    kv_item = jnp.dtype(cfg.activ_dtype).itemsize
+    pos_bytes = 2 * cfg.n_kv_heads * cfg.head_dim * kv_item    # K + V
+    return {
+        "n_blocks": cfg.n_layers * batch * pages_per_seq,
+        "pages_per_seq": pages_per_seq,
+        "bytes_per_access": pos_bytes,
+        "block_bytes": pos_bytes * page_size,
+    }
+
+
+def decode_telemetry(params: dict, cfg: ModelConfig, cache: Cache,
+                     tokens: jax.Array, page_size: int
+                     ) -> Tuple[Cache, "np.ndarray"]:
+    """Drive a multi-step decode loop and collect its KV telemetry feed.
+
+    ``tokens`` is ``(T, B)`` — one token per sequence per step.  Each step is
+    one jit'd :func:`decode_step` with ``page_size`` telemetry on; the
+    per-step ``kv_page_mass`` arrays are stacked into ``(T, L, B,
+    pages_per_seq)`` host floats — the access-mass stream a
+    :class:`repro.scenarios.kv_cache.KVCacheScenario` quantizes into the
+    EpochRuntime's page-index batches.  Returns ``(final cache, mass)``."""
+    import numpy as np
+
+    step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t,
+                                               page_size=page_size))
+    masses = []
+    for t in tokens:
+        _, cache, aux = step(params, cache, t)
+        masses.append(aux["kv_page_mass"])
+    return cache, np.asarray(jnp.stack(masses), np.float64)
+
+
 def _zamba_shared_attn_decode(x, sp, cfg, inv, kc, vc, pos):
     b, d = x.shape
     hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads

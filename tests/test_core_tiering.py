@@ -304,3 +304,25 @@ def test_overlapped_epoch_time_monotone_in_overlap():
 
 def test_migration_overlap_zero_blocks_hides_nothing():
     assert CXL_SYSTEM.migration_overlap_s(8e5, 256.0, 0, 4096.0) == 0.0
+
+
+def test_overlapped_epoch_time_matches_record_decomposition():
+    """Parity contract with EpochRuntime._record's prefetch accounting: the
+    runtime charges access_time_s + migration_time_s - migration_overlap_s
+    component-wise (the record needs each field separately);
+    overlapped_epoch_time_s folds the hidden share through the
+    access_time_s(overlap=) hook.  The two derivations must stay equal for
+    every (traffic mix, migration size, overlap) — an edit to either (the
+    min(ts, mig) cap, the eff fold-out) breaks this, not just the docs."""
+    for nf, ns in ((0.0, 9e5), (2e5, 8e5), (9e5, 0.0)):
+        for nb in (0, 10, 5_000, 5_000_000):
+            for ov in (0.0, 0.3, 1.0):
+                decomposed = (
+                    CXL_SYSTEM.access_time_s(nf, ns, 256.0)
+                    + CXL_SYSTEM.migration_time_s(nb, 4096.0)
+                    - CXL_SYSTEM.migration_overlap_s(ns, 256.0, nb, 4096.0,
+                                                     overlap=ov))
+                folded = CXL_SYSTEM.overlapped_epoch_time_s(
+                    nf, ns, 256.0, nb, 4096.0, overlap=ov)
+                assert folded == pytest.approx(decomposed, rel=1e-12), \
+                    (nf, ns, nb, ov)

@@ -97,6 +97,34 @@ def test_lookahead_rejects_nonpositive_depth():
         LookaheadWindow(8, depth=0)
 
 
+def test_epoch_histogram_memo_invalidates_on_in_place_refill():
+    """Regression: a dataloader that refills ONE preallocated buffer per
+    epoch (same object, new contents) must not be served the previous
+    epoch's histogram — a stale memo here blinds the phase detector to a
+    rotation and freezes the lookahead rank."""
+    from repro.hints.providers import epoch_histogram
+
+    buf = np.zeros((2, 100), np.int32)
+    buf[:] = 1
+    h1 = epoch_histogram(buf, 8).copy()
+    assert h1[1] == 200
+    buf[:] = 5                              # in-place refill: new epoch
+    h2 = epoch_histogram(buf, 8)
+    assert h2[5] == 200 and h2[1] == 0
+    # unchanged buffer still hits the memo (same object returned)
+    assert epoch_histogram(buf, 8) is h2
+
+
+def test_detector_sees_rotation_through_a_reused_buffer():
+    s = datagen.PhaseShiftSampler(SPEC, rotate_by=SPEC.n_pages // 2, seed=0)
+    det = PhaseChangeDetector(SPEC.n_pages)
+    buf = np.empty((3, 5_000), np.int64)
+    for phase in (0, 0, 1):
+        buf[:] = _epoch(s, phase=phase, batches=3, lookups=5_000)
+        det.update(buf)
+    assert det.shifts_detected == 1
+
+
 # ------------------------------------------------------- PhaseChangeDetector
 def _epoch(sampler, phase, batches=3, lookups=5_000):
     return np.stack([sampler.sample(lookups, phase=phase)

@@ -61,6 +61,59 @@ def test_kv_page_mass_telemetry_shapes_and_conservation():
     np.testing.assert_allclose(mass.sum(-1), cfg.n_heads, rtol=1e-3)
 
 
+def test_kv_page_mass_matches_position_mass_histogram_ragged_final_page():
+    """Ground truth for the page binning: page mass == the per-position
+    attention-mass histogram (page_size=1 telemetry) summed over each page's
+    positions — including the ragged final page when seq_len % page_size
+    != 0 (max_len=13, page_size=8 -> pages of 8 and 5 positions)."""
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(4)
+    max_len, page = 13, 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 11)))
+    _, cache = engine.prefill(params, cfg, tokens=tokens, max_len=max_len)
+    nxt = jnp.zeros((2,), jnp.int32)
+    _, _, aux_paged = engine.decode_step(params, cfg, cache, nxt,
+                                         page_size=page)
+    _, _, aux_pos = engine.decode_step(params, cfg, cache, nxt, page_size=1)
+    paged = np.asarray(aux_paged["kv_page_mass"], np.float64)   # (L, B, 2)
+    by_pos = np.asarray(aux_pos["kv_page_mass"], np.float64)    # (L, B, 13)
+    assert paged.shape == (cfg.n_layers, 2, -(-max_len // page))
+    np.testing.assert_allclose(paged[..., 0], by_pos[..., :page].sum(-1),
+                               rtol=1e-6)
+    np.testing.assert_allclose(paged[..., 1], by_pos[..., page:].sum(-1),
+                               rtol=1e-6)
+    # attention probability is conserved across the page grid: n_heads per
+    # (layer, sequence), none of it lost to the ragged tail
+    np.testing.assert_allclose(paged.sum(-1), cfg.n_heads, rtol=1e-3)
+    # positions beyond the current length carry no mass
+    assert np.all(by_pos[..., 12] == 0.0)        # pos==11 is the new token
+
+
+def test_kv_page_mass_accumulates_over_decode_steps():
+    """The scenario-layer feed: decode_telemetry's stacked per-step masses
+    equal stepping the cache manually, and accumulated mass conserves
+    n_heads per step on a ragged page grid."""
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(1))
+    rng = np.random.default_rng(5)
+    max_len, page, steps = 14, 4, 3
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 9)))
+    _, cache = engine.prefill(params, cfg, tokens=tokens, max_len=max_len)
+    step_toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (steps, 2)))
+    _, mass = engine.decode_telemetry(params, cfg, cache, step_toks,
+                                      page_size=page)
+    assert mass.shape == (steps, cfg.n_layers, 2, -(-max_len // page))
+    ref_cache = cache
+    for t in range(steps):
+        _, ref_cache, aux = engine.decode_step(params, cfg, ref_cache,
+                                               step_toks[t], page_size=page)
+        np.testing.assert_allclose(
+            mass[t], np.asarray(aux["kv_page_mass"], np.float64),
+            rtol=1e-5, atol=1e-7)    # jit'd loop vs eager steps (f32 math)
+    np.testing.assert_allclose(mass.sum(-1), cfg.n_heads, rtol=1e-3)
+
+
 def test_expert_counts_sum_to_topk_tokens():
     cfg = get_smoke_config("mixtral-8x22b")
     params = init_params(cfg, jax.random.key(3))

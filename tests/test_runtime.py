@@ -84,11 +84,11 @@ def test_observe_all_one_dispatch_per_epoch(monkeypatch):
     tel.observe_all(tel.bundle_init(n, pebs_period=97, nb_scan_rate=64),
                     jnp.asarray(batches))
     dispatches.clear()
-    traces_before = tel.TRACE_COUNTS["observe_all"]
-    mgr.observe_epoch(batches)
-    mgr.observe_epoch(make_batches(n, n_batches=4, batch=1000, seed=1))
-    assert dispatches == [batches.shape, batches.shape]
-    assert tel.TRACE_COUNTS["observe_all"] == traces_before  # no re-trace
+    with rtmod.counting() as counts:
+        mgr.observe_epoch(batches)
+        mgr.observe_epoch(make_batches(n, n_batches=4, batch=1000, seed=1))
+        assert dispatches == [batches.shape, batches.shape]
+        assert counts.observe_trace["observe_all"] == 0      # no re-trace
 
 
 def test_observe_epoch_rejects_flat_stream():
@@ -210,21 +210,19 @@ def test_fused_step_bit_identical_with_hints_and_rate_limit():
 def test_fused_epoch_is_two_dispatches_and_one_trace():
     """Acceptance: one epoch of all five lanes = observe_all + epoch_step
     (two dispatches), nothing from the per-lane reference machinery, and
-    equal-shaped epochs re-use one epoch_step trace."""
+    equal-shaped epochs re-use one epoch_step trace.  (Counted inside
+    runtime.counting(), so activity from other tests can't leak in.)"""
     n = 512
     rt = EpochRuntime(n, 64, policies=ALL_POLICIES, pebs_period=97,
                       nb_scan_rate=128)
     rng = np.random.default_rng(0)
     rt.step(rng.integers(0, n, (3, 1000)).astype(np.int32))  # warm the trace
-    before = {**rtmod.DISPATCH_COUNTS}
-    traces_before = rtmod.TRACE_COUNTS["epoch_step"]
-    for _ in range(3):
-        rt.step(rng.integers(0, n, (3, 1000)).astype(np.int32))
-    delta = {k: rtmod.DISPATCH_COUNTS[k] - before[k]
-             for k in rtmod.DISPATCH_COUNTS}
-    assert delta == {"observe_all": 3, "epoch_step": 3, "reference": 0,
-                     "hint_refresh": 0}
-    assert rtmod.TRACE_COUNTS["epoch_step"] == traces_before  # no re-trace
+    with rtmod.counting() as counts:
+        for _ in range(3):
+            rt.step(rng.integers(0, n, (3, 1000)).astype(np.int32))
+        assert counts.dispatch == {"observe_all": 3, "epoch_step": 3,
+                                   "reference": 0, "hint_refresh": 0}
+        assert counts.trace["epoch_step"] == 0               # no re-trace
 
 
 def test_fused_runtime_lane_views_keep_invariants():
@@ -357,15 +355,12 @@ def test_hint_enabled_fused_epoch_is_still_two_dispatches():
                       nb_scan_rate=128,
                       hints=HintPipeline(n, lookahead=LookaheadWindow(n)))
     rt.step(epoch(), lookahead=(epoch(),))        # warm the trace
-    before = {**rtmod.DISPATCH_COUNTS}
-    traces_before = rtmod.TRACE_COUNTS["epoch_step"]
-    for _ in range(3):
-        rt.step(epoch(), lookahead=(epoch(),))
-    delta = {k: rtmod.DISPATCH_COUNTS[k] - before[k]
-             for k in rtmod.DISPATCH_COUNTS}
-    assert delta == {"observe_all": 3, "epoch_step": 3, "reference": 0,
-                     "hint_refresh": 3}
-    assert rtmod.TRACE_COUNTS["epoch_step"] == traces_before  # no re-trace
+    with rtmod.counting() as counts:
+        for _ in range(3):
+            rt.step(epoch(), lookahead=(epoch(),))
+        assert counts.dispatch == {"observe_all": 3, "epoch_step": 3,
+                                   "reference": 0, "hint_refresh": 3}
+        assert counts.trace["epoch_step"] == 0               # no re-trace
 
 
 def test_prefetch_beats_static_hinted_on_post_shift_coverage():
@@ -402,6 +397,56 @@ def test_prefetch_overlap_time_no_worse_than_stop_the_world():
     for lane in ALL_POLICIES[:-1]:
         for a, b in zip(t_ov.lane(lane), t_st.lane(lane)):
             assert a.to_dict() == b.to_dict(), (lane, a.epoch)
+
+
+def test_counting_scopes_and_restores_the_counters():
+    """runtime.counting() zeroes all three counter dicts for the block and
+    restores pre-entry totals (plus the block's activity) on exit, so tests
+    and benchmark runs stop leaking dispatch counts into each other."""
+    rtmod.DISPATCH_COUNTS["observe_all"] += 1    # pre-existing activity
+    outer_before = dict(rtmod.DISPATCH_COUNTS)
+    rt = EpochRuntime(64, 8, policies=("hmu_oracle",), nb_scan_rate=16)
+    rng = np.random.default_rng(0)
+    with rtmod.counting() as counts:
+        assert counts.dispatch["observe_all"] == 0           # zeroed at entry
+        assert counts.trace["epoch_step"] == 0
+        assert counts.observe_trace["observe_all"] == 0
+        rt.step(rng.integers(0, 64, (2, 100)).astype(np.int32))
+        assert counts.dispatch["observe_all"] == 1
+        assert counts.dispatch["epoch_step"] == 1
+        assert counts.dispatch is rtmod.DISPATCH_COUNTS      # the live dict
+    # outer totals: what was there before, plus the block's activity
+    assert rtmod.DISPATCH_COUNTS["observe_all"] == \
+        outer_before["observe_all"] + 1
+    assert rtmod.DISPATCH_COUNTS["epoch_step"] == \
+        outer_before["epoch_step"] + 1
+
+
+def test_pending_migration_resets_per_run():
+    """Regression: pending_migration_s (the prefetch lane's boundary
+    migration not yet charged to any record) must not carry into a reused
+    runtime's next run() — the pending boundary belongs to the previous
+    workload (where it is surfaced via the summary), so charging it against
+    the new stream's first epoch would double-count it."""
+    from repro.hints import HintPipeline, LookaheadWindow
+
+    n = 400
+    rng = np.random.default_rng(0)
+
+    def epoch():
+        return rng.integers(0, n, (2, 3000)).astype(np.int32)
+
+    rt = EpochRuntime(n, 50, policies=("prefetch",), nb_scan_rate=100,
+                      hints=HintPipeline(n, lookahead=LookaheadWindow(n)))
+    # warm-up steps with live lookahead: the last boundary promotes, leaving
+    # a pending migration that overlaps an epoch that never runs here
+    rt.step(epoch(), lookahead=(epoch(),))
+    rt.step(epoch(), lookahead=(epoch(),))
+    assert rt.pending_migration_s > 0.0
+    rt.run([epoch(), epoch()])
+    first_rec_of_run = rt.records["prefetch"][2]
+    assert first_rec_of_run.migration_s == 0.0   # previous pending not charged
+    assert first_rec_of_run.hidden_s == 0.0
 
 
 def test_prefetch_without_pipeline_stays_idle():

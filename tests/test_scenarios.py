@@ -1,0 +1,209 @@
+"""Scenario-layer tests: one workload-agnostic EpochRuntime packaging, three
+workloads.  The tentpole invariants — fused-vs-reference bit-identity and
+exactly 2 jit dispatches/epoch — must hold for the non-DLRM scenarios too,
+and the DLRM packaging must reproduce what ``tracesim.run_online`` always
+did."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import runtime as rtmod
+from repro.core.runtime import ALL_POLICIES, EpochRuntime
+from repro.dlrm import datagen, tracesim
+from repro.scenarios import (DLRMScenario, KVCacheScenario, MoEExpertScenario,
+                             build_hints, run_scenario)
+from repro.scenarios.kv_cache import quantize_access_counts
+
+SMALL_SPEC = dataclasses.replace(datagen.SMALL, lookups_per_batch=8_000)
+
+
+def small_dlrm(**kw):
+    kw.setdefault("spec", SMALL_SPEC)
+    kw.setdefault("n_epochs", 4)
+    kw.setdefault("batches_per_epoch", 2)
+    kw.setdefault("shift_at", 2)
+    return DLRMScenario(**kw)
+
+
+def small_kv(**kw):
+    kw.setdefault("batch", 2)
+    kw.setdefault("n_epochs", 3)
+    kw.setdefault("batches_per_epoch", 2)
+    kw.setdefault("accesses_per_batch", 1_024)
+    return KVCacheScenario(**kw)
+
+
+def small_moe(**kw):
+    kw.setdefault("n_epochs", 4)
+    kw.setdefault("batches_per_epoch", 2)
+    kw.setdefault("shift_at", 2)
+    kw.setdefault("batch", 2)
+    return MoEExpertScenario(**kw)
+
+
+SCENARIO_FACTORIES = {
+    "dlrm": small_dlrm,
+    "kv_cache": small_kv,
+    "moe_experts": small_moe,
+}
+
+
+# --------------------------------------------------------------- DLRM parity
+def test_run_online_is_the_dlrm_scenario():
+    """The tracesim entry point and the scenario layer are ONE packaging:
+    identical trajectory and summary for identical parameters."""
+    kw = dict(n_epochs=4, batches_per_epoch=2, shift_at=2, seed=0, hints=True)
+    old = tracesim.run_online(spec=SMALL_SPEC, **kw)
+    sc = small_dlrm()
+    new = run_scenario(sc, hints=True)
+    assert old["trajectory"] == new["trajectory"]
+    assert old["summary"] == new["summary"]
+    assert new["trajectory"]["scenario"] == "dlrm"
+
+
+def test_for_scenario_pulls_geometry_from_the_scenario():
+    sc = small_dlrm()
+    rt = EpochRuntime.for_scenario(sc, policies=("hmu_oracle",))
+    assert rt.n_blocks == sc.n_blocks == SMALL_SPEC.n_pages
+    assert rt.k_hot == sc.k_hot
+    assert rt.bytes_per_access == float(SMALL_SPEC.row_bytes)
+    assert rt.block_bytes == float(SMALL_SPEC.page_bytes)
+    assert rt.system is sc.system
+    # overrides replace scenario-provided kwargs
+    rt2 = EpochRuntime.for_scenario(sc, policies=("hmu_oracle",),
+                                    ewma_alpha=0.9, nb_scan_rate=7)
+    assert rt2.ewma_alpha == 0.9
+
+
+def test_dlrm_hint_layout_matches_for_dlrm_pipeline():
+    """build_hints on the DLRM scenario == HintPipeline.for_dlrm: the static
+    rank arrays agree element-for-element (same layout, prior, clip)."""
+    from repro.hints import HintPipeline
+
+    sc = small_dlrm()
+    a = build_hints(sc)
+    b = HintPipeline.for_dlrm(SMALL_SPEC, seed=0)
+    np.testing.assert_array_equal(a._static_rank, b._static_rank)
+    assert a.lookahead_depth == b.lookahead_depth == 1
+
+
+# ------------------------------------------------ tentpole: both invariants
+@pytest.mark.parametrize("name", ["kv_cache", "moe_experts"])
+def test_scenario_fused_bit_identical_to_reference(name):
+    """ISSUE acceptance: the non-DLRM workloads run through the SAME runtime
+    with fused-vs-reference bit-identical trajectories (every EpochRecord
+    field of every lane and epoch, hint-enabled)."""
+    sc = SCENARIO_FACTORIES[name]()
+    fused = run_scenario(sc, hints=True)
+    reference = run_scenario(sc, hints=True, fused=False)
+    assert set(fused["trajectory"]["lanes"]) == set(ALL_POLICIES)
+    assert fused["trajectory"] == reference["trajectory"]
+    assert fused["summary"] == reference["summary"]
+
+
+@pytest.mark.parametrize("name", ["kv_cache", "moe_experts"])
+def test_scenario_epoch_is_two_dispatches(name):
+    """ISSUE acceptance: a hint-enabled epoch of any scenario is exactly
+    observe_all + epoch_step — hint refreshes are transfers, not
+    dispatches."""
+    sc = SCENARIO_FACTORIES[name]()
+    sc.epochs()                                   # model runs outside counter
+    with rtmod.counting() as counts:
+        run_scenario(sc, hints=True)
+        assert counts.dispatch["observe_all"] == sc.n_epochs
+        assert counts.dispatch["epoch_step"] == sc.n_epochs
+        assert counts.dispatch["reference"] == 0
+        assert counts.dispatch["hint_refresh"] >= 1
+
+
+# ----------------------------------------------------------- kv_cache stream
+def test_kv_scenario_geometry_has_ragged_final_page():
+    sc = small_kv()
+    assert sc.max_len % sc.page_size != 0         # default geometry IS ragged
+    assert sc.pages_per_seq == -(-sc.max_len // sc.page_size)
+    assert sc.n_blocks == (sc.cfg.n_layers * sc.batch * sc.pages_per_seq)
+
+
+def test_kv_scenario_epochs_are_deterministic_equal_shape_batches():
+    sc = small_kv()
+    eps1 = list(sc.epochs())
+    eps2 = list(sc.epochs())                      # cached replay
+    assert len(eps1) == sc.n_epochs
+    for a, b in zip(eps1, eps2):
+        np.testing.assert_array_equal(a, b)
+    for ep in eps1:
+        assert ep.shape == (sc.batches_per_epoch, sc.accesses_per_batch)
+        assert ep.dtype == np.int32
+        assert ep.min() >= 0 and ep.max() < sc.n_blocks
+
+
+def test_kv_scenario_accesses_follow_attention_mass():
+    """The quantized stream apportions each step's accesses by page mass:
+    pages holding the prefill carry mass, pages past the decode frontier
+    carry none."""
+    sc = small_kv()
+    eps = list(sc.epochs())
+    hist = np.bincount(eps[0].ravel(), minlength=sc.n_blocks)
+    # the final pages of every sequence are beyond the decode frontier in
+    # epoch 0 -> zero mass -> zero accesses
+    last_page_ids = [(l * sc.batch + b) * sc.pages_per_seq
+                     + (sc.pages_per_seq - 1)
+                     for l in range(sc.cfg.n_layers) for b in range(sc.batch)]
+    assert hist[last_page_ids].sum() == 0
+    # prefill pages absorb attention from the first decode step
+    first_page_ids = [(l * sc.batch + b) * sc.pages_per_seq
+                      for l in range(sc.cfg.n_layers)
+                      for b in range(sc.batch)]
+    assert (hist[first_page_ids] > 0).all()
+
+
+def test_quantize_access_counts_exact_total_and_proportionality():
+    w = np.array([3.0, 1.0, 0.0, 4.0])
+    c = quantize_access_counts(w, 800)
+    assert c.sum() == 800
+    assert c[2] == 0                               # zero weight, zero access
+    np.testing.assert_allclose(c / 800, w / w.sum(), atol=1 / 800)
+    assert (quantize_access_counts(np.zeros(4), 100) == 0).all()
+    assert (quantize_access_counts(w, 0) == 0).all()
+
+
+# -------------------------------------------------------- moe_experts stream
+def test_moe_scenario_stream_shape_and_shift():
+    sc = small_moe()
+    eps = list(sc.epochs())
+    assert len(eps) == sc.n_epochs
+    for ep in eps:
+        assert ep.shape == (sc.batches_per_epoch, sc.batch_len)
+        assert ep.min() >= 0 and ep.max() < sc.n_blocks
+    # the routing shift re-concentrates traffic: pre- and post-shift expert
+    # histograms differ
+    pre = np.bincount(eps[0].ravel(), minlength=sc.n_blocks)
+    post = np.bincount(eps[-1].ravel(), minlength=sc.n_blocks)
+    assert pre.sum() == post.sum()                # constant stream length
+    assert not np.array_equal(pre, post)
+
+
+def test_moe_scenario_rejects_dense_arch():
+    with pytest.raises(ValueError, match="MoE"):
+        MoEExpertScenario(arch="internlm2-1.8b")
+
+
+def test_expert_access_batch_shapes():
+    from repro.models.moe import expert_access_batch
+
+    out = expert_access_batch(np.array([[1, 0, 2], [0, 1, 0]]))
+    np.testing.assert_array_equal(out, [0, 1, 2, 2])
+    assert out.dtype == np.int32
+    with pytest.raises(ValueError, match="counts"):
+        expert_access_batch(np.zeros((2, 2, 2)))
+
+
+# ------------------------------------------------------------ hint layouts
+def test_runtime_only_scenarios_build_lookahead_only_pipelines():
+    for factory in (small_kv, small_moe):
+        sc = factory()
+        assert sc.hint_layout() is None
+        pipe = build_hints(sc)
+        assert (pipe._static_rank == 0).all()     # hinted lane: pure telemetry
+        assert pipe.lookahead_depth == 1          # prefetch lane: live
