@@ -15,8 +15,10 @@ the paper reports for that artifact).
                      coverage/accuracy columns (fails on >2 dispatches/epoch
                      even with the prefetch lane live; --scale smoke for CI)
                      plus per-scenario rows (repro.scenarios: dlrm /
-                     kv_cache / moe_experts — all three at full scale, or
-                     the --scenario selection) each gated on the same
+                     kv_cache / moe_experts / mmap_bench, and the
+                     multi-tenant fleet mix with per-tenant
+                     coverage/accuracy rows — all at full scale, or the
+                     --scenario selection) each gated on the same
                      2-dispatch count and fused-vs-reference bit-identity
   telemetry_sweep  — §V coverage-vs-overhead: PEBS period / NB scan sweeps
   kernel_micro     — gather_count / embedding_bag / flash_attention
@@ -93,9 +95,11 @@ def epoch_runtime(json_mode: bool = False, scale: str = "full",
     against the per-lane reference path and writes the machine-readable perf
     trajectory to ``results/BENCH_epoch_runtime.json`` (wall time,
     dispatches/epoch, blocks/s at each size), plus one row per workload
-    scenario (``scenarios``; full scale defaults to all of dlrm / kv_cache /
-    moe_experts) with per-lane coverage/accuracy columns, each gated on
-    exactly 2 dispatches/epoch AND fused-vs-reference bit-identity.  Exits
+    scenario (``scenarios``; full scale defaults to every ALL_SCENARIOS
+    entry incl. the multi-tenant ``fleet`` mix, whose row carries
+    per-tenant coverage/accuracy columns) with per-lane coverage/accuracy
+    columns, each gated on exactly 2 dispatches/epoch AND fused-vs-reference
+    bit-identity (tenant accounting included for the fleet).  Exits
     non-zero if any gate fails, so CI catches dispatch creep on every
     workload.  ``scale='smoke'`` shrinks the sizes for the CI fast suite."""
     import json
@@ -125,7 +129,7 @@ def epoch_runtime(json_mode: bool = False, scale: str = "full",
         _bench_epoch_runtime(dest, scale, scenarios or [])
 
 
-ALL_SCENARIOS = ("dlrm", "kv_cache", "moe_experts")
+ALL_SCENARIOS = ("dlrm", "kv_cache", "moe_experts", "mmap_bench", "fleet")
 
 
 def _make_scenario(name: str, scale: str):
@@ -147,6 +151,29 @@ def _make_scenario(name: str, scale: str):
     if name == "moe_experts":
         return sc.MoEExpertScenario(n_epochs=6, batches_per_epoch=3,
                                     shift_at=3, batch=2 if smoke else 4)
+    if name == "mmap_bench":
+        return sc.MmapBenchScenario(
+            n_epochs=6, batches_per_epoch=3,
+            accesses_per_batch=8_000 if smoke else 40_000)
+    if name == "fleet":
+        # 3-tenant mix under weighted-fair quotas: DLRM + a scanning noisy
+        # neighbour (mmap-bench) + MoE expert banks, contended fast tier
+        from repro.fleet import FleetScenario, TenantSpec
+        spec = dataclasses.replace(
+            datagen.SMALL, lookups_per_batch=8_000 if smoke else 30_000)
+        tenants = [
+            TenantSpec(sc.DLRMScenario(spec=spec, n_epochs=6,
+                                       batches_per_epoch=3, shift_at=3),
+                       weight=10.0, name="dlrm"),
+            TenantSpec(sc.MmapBenchScenario(
+                n_epochs=6, batches_per_epoch=3,
+                accesses_per_batch=10_000 if smoke else 60_000),
+                weight=2.0, name="scanner"),
+            TenantSpec(sc.MoEExpertScenario(n_epochs=6, batches_per_epoch=3,
+                                            shift_at=3, batch=2),
+                       weight=1.0, name="moe"),
+        ]
+        return FleetScenario(tenants, k_hot=300, capacity="weighted")
     raise ValueError(f"unknown scenario {name!r}; choose from {ALL_SCENARIOS}")
 
 
@@ -154,27 +181,39 @@ def _bench_scenarios(scale: str, names) -> tuple:
     """One EpochRuntime, many workloads: per-scenario coverage/accuracy rows
     plus the two runtime invariants every workload must inherit — exactly 2
     jit dispatches/epoch (hint refreshes excluded) and fused-vs-reference
-    bit-identical trajectories.  Returns (rows, all_gates_ok)."""
+    bit-identical trajectories.  The ``fleet`` scenario (a multi-tenant mix
+    under weighted-fair quotas) additionally records per-tenant
+    coverage/accuracy rows and extends the bit-identity gate to the tenant
+    accounting.  Returns (rows, all_gates_ok)."""
     from repro.core import runtime as rtmod
     from repro.scenarios import run_scenario
 
     rows, ok = {}, True
     for name in names:
         scen = _make_scenario(name, scale)
+        if name == "fleet":
+            from repro.fleet import run_fleet
+
+            def runner(**kw):
+                return run_fleet(scen, **kw)
+        else:
+            def runner(**kw):
+                return run_scenario(scen, **kw)
         # materialize the stream and run one untimed warm-up: data generation
         # (incl. the kv/moe model runs) and jit compilation stay outside the
         # timer, same discipline as the sizes bench above
         eps = list(scen.epochs())
-        run_scenario(scen, hints=True, epochs=eps)
+        runner(hints=True, epochs=eps)
         with rtmod.counting() as counts:
             t0 = time.time()
-            fused = run_scenario(scen, hints=True, epochs=eps)
+            fused = runner(hints=True, epochs=eps)
             wall = time.time() - t0
             d = counts.dispatch
             disp = (d["observe_all"] + d["epoch_step"]
                     + d["reference"]) / scen.n_epochs
-        reference = run_scenario(scen, hints=True, fused=False, epochs=eps)
-        identical = fused["trajectory"] == reference["trajectory"]
+        reference = runner(hints=True, fused=False, epochs=eps)
+        identical = (fused["trajectory"] == reference["trajectory"]
+                     and fused.get("tenants") == reference.get("tenants"))
         # NOTE: fused_wall_s spans the whole run_scenario packaging (runtime
         # + pipeline construction, trajectory serialization, summary) — an
         # invariant-gate row, not a throughput row; the sizes bench above is
@@ -195,13 +234,35 @@ def _bench_scenarios(scale: str, names) -> tuple:
                 for lane, recs in fused["trajectory"]["lanes"].items()
             },
         }
+        if name == "fleet":
+            # per-tenant coverage/accuracy rows (quota + hot-set context);
+            # the full per-epoch records live in the run result, the bench
+            # artifact keeps the headline means
+            entry["capacity"] = scen.capacity
+            entry["tenants"] = {
+                tname: {
+                    "cap": trow["cap"], "hot_k": trow["hot_k"],
+                    "n_blocks": trow["n_blocks"],
+                    "lanes": {
+                        lane: {"coverage": lrow["mean_coverage"],
+                               "accuracy": lrow["mean_accuracy"]}
+                        for lane, lrow in trow["lanes"].items()
+                    },
+                }
+                for tname, trow in fused["tenants"].items()
+            }
         if disp > 2 or not identical:
             ok = False
         rows[name] = entry
+        extra = ""
+        if name == "fleet":
+            extra = (" dlrm_tenant_cov="
+                     f"{entry['tenants']['dlrm']['lanes']['hmu_oracle']['coverage']:.2f}")
         _row(f"epoch_runtime_scenario_{name}", wall * 1e6,
              f"dispatches={disp:.0f}/ep bit_identical={identical} "
              f"oracle_cov={entry['lanes']['hmu_oracle']['coverage']:.2f} "
-             f"prefetch_cov={entry['lanes']['prefetch']['coverage']:.2f}")
+             f"prefetch_cov={entry['lanes']['prefetch']['coverage']:.2f}"
+             + extra)
     return rows, ok
 
 

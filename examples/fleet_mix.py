@@ -1,0 +1,111 @@
+"""Multi-tenant fleet: four workloads, one fast tier, three capacity policies.
+
+The paper's HMU case is ultimately a datacenter case: device-level telemetry
+matters most when many workloads contend for one bounded fast tier (the TPP /
+Telescope regime).  This walkthrough co-locates four tenants in one
+`repro.fleet.FleetScenario`:
+
+* **dlrm**    — the §III.B embedding-page trace (the tenant worth protecting),
+* **kv**      — a tiered LLM KV cache fed by decode-time attention mass,
+* **moe**     — MoE expert banks placed from router counters,
+* **scanner** — mmap-bench (§III.A) cranked into a noisy neighbour: a wide,
+  internally-uniform region scanned at high volume, whose loud counters
+  out-rank everyone else's hot sets.
+
+and runs the six-lane EpochRuntime over the interleaved mix twice:
+
+* ``capacity="shared"``   — one pool, no quotas: the scanner's counters crowd
+  the DLRM hot set out of every lane's top-k selection and its coverage
+  craters.
+* ``capacity="weighted"`` — weighted-fair quotas sized so the DLRM quota
+  covers its solo hot set: every lane's selection is segment-capped per
+  tenant on device, and DLRM holds within a few points of its solo run while
+  the scanner is pinned to its slice.
+
+    PYTHONPATH=src python examples/fleet_mix.py
+"""
+import dataclasses
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.dlrm import datagen
+from repro.fleet import FleetScenario, TenantSpec, run_fleet
+from repro.scenarios import (DLRMScenario, KVCacheScenario, MmapBenchScenario,
+                             MoEExpertScenario)
+from repro.workloads import mmap_bench
+
+N_EPOCHS, LANE = 6, "hmu_oracle"
+K_HOT = 340                           # < combined demand: contention is real
+
+# one scenario instance per tenant, shared by every fleet below, so the
+# model-backed streams (kv decode, moe routing) generate once and replay
+dlrm = DLRMScenario(
+    spec=dataclasses.replace(datagen.SMALL, lookups_per_batch=30_000),
+    n_epochs=N_EPOCHS, batches_per_epoch=2, shift_at=0)       # stationary
+kv = KVCacheScenario(batch=2, n_epochs=N_EPOCHS, batches_per_epoch=2,
+                     accesses_per_batch=2_048)
+moe = MoEExpertScenario(n_epochs=N_EPOCHS, batches_per_epoch=2, batch=2,
+                        shift_at=3)
+scanner = MmapBenchScenario(
+    spec=mmap_bench.MmapBenchSpec(total_bytes=640 * 4096,
+                                  hot_bytes=512 * 4096),
+    n_epochs=N_EPOCHS, batches_per_epoch=2, accesses_per_batch=60_000)
+
+
+def tenants():
+    # weights are the operator's SLO knob: demand-sized for the protected
+    # tenants, deliberately small for the scanner
+    return [
+        TenantSpec(dlrm, weight=250.0, name="dlrm"),
+        TenantSpec(kv, weight=float(kv.k_hot), name="kv"),
+        TenantSpec(moe, weight=float(moe.k_hot), name="moe"),
+        TenantSpec(scanner, weight=60.0, name="scanner"),
+    ]
+
+
+runs = {}
+for capacity in ("shared", "weighted"):
+    fleet = FleetScenario(tenants(), k_hot=K_HOT, capacity=capacity)
+    runs[capacity] = run_fleet(fleet, hints=True,
+                               solo=(capacity == "weighted"))
+solo = runs["weighted"]["solo"]
+
+fleet_blocks = sum(t.scenario.n_blocks for t in tenants())
+print(f"fleet: {fleet_blocks} blocks across 4 tenants, k_hot={K_HOT} shared "
+      f"slots, {N_EPOCHS} interleaved epochs; '{LANE}' lane shown\n")
+print(f"{'tenant':>8s} {'solo cov':>9s} | {'shared cov':>10s} "
+      f"{'weighted cov':>12s} {'quota':>6s}")
+for name in ("dlrm", "kv", "moe", "scanner"):
+    s = solo[name]["summary"][LANE]["final_coverage"]
+    sh = runs["shared"]["tenants"][name]["lanes"][LANE]["final_coverage"]
+    wf = runs["weighted"]["tenants"][name]["lanes"][LANE]["final_coverage"]
+    cap = runs["weighted"]["tenants"][name]["cap"]
+    print(f"{name:>8s} {s:>9.2f} | {sh:>10.2f} {wf:>12.2f} {cap:>6d}")
+
+solo_cov = solo["dlrm"]["summary"][LANE]["final_coverage"]
+shared_cov = runs["shared"]["tenants"]["dlrm"]["lanes"][LANE][
+    "final_coverage"]
+fair_cov = runs["weighted"]["tenants"]["dlrm"]["lanes"][LANE][
+    "final_coverage"]
+assert runs["weighted"]["tenants"]["dlrm"]["cap"] >= dlrm.k_hot
+assert shared_cov < solo_cov - 0.3    # the scanner craters the shared pool
+assert fair_cov > solo_cov - 0.05     # weighted-fair holds DLRM near solo
+
+print(f"\nshared pool: the scanner's {scanner.spec.k_hot}-page arena at "
+      f"{scanner.accesses_per_batch * scanner.batches_per_epoch} "
+      f"accesses/epoch out-counts the DLRM hot head — DLRM coverage "
+      f"{solo_cov:.2f} (solo) -> {shared_cov:.2f} (shared) ✗")
+print(f"weighted-fair: DLRM quota "
+      f"{runs['weighted']['tenants']['dlrm']['cap']} >= its solo hot set "
+      f"({dlrm.k_hot}); segment-capped selection keeps its blocks in every "
+      f"lane's top-k — coverage {fair_cov:.2f}, within "
+      f"{abs(solo_cov - fair_cov):.2f} of solo ✓")
+
+# the runtime invariants survive multi-tenancy: same epoch loop, same
+# 2-dispatch fused step, per-tenant accounting rides the existing sync
+mean_t = {name: runs["weighted"]["tenants"][name]["lanes"][LANE][
+    "mean_time_us"] for name in ("dlrm", "kv", "moe", "scanner")}
+print("\nper-tenant mean epoch time (weighted, native byte geometry): "
+      + "  ".join(f"{n}={t:.0f}us" for n, t in mean_t.items()))

@@ -61,6 +61,20 @@ equivalent to ``MemSystem.overlapped_epoch_time_s``, parity-tested in
 ``test_core_tiering`` — with the migration issued at the *previous* boundary
 charged against the epoch it overlapped and its hidden share recorded in
 ``EpochRecord.hidden_s``.
+
+**Multi-tenancy.**  A :class:`Tenancy` (built by ``repro.fleet``) declares
+how one shared block space splits into per-tenant id ranges, each tenant's
+true-hot-set size, and optional per-tenant quotas.  With quotas, every
+lane's top-k select becomes *segment-capped* (``selectk.segment_top_k_mask``
+masks each key row to each tenant's own top-``caps[t]`` before the global
+select), so a noisy tenant cannot crowd a quiet one out of any lane's
+candidate list — and because ``apply_plan`` never evicts a still-wanted
+resident while ``sum(caps) <= k_hot``, a tenant's capped want is *admitted*
+unconditionally: quotas are isolation guarantees.  Per-tenant accounting
+(tenant-segment reductions over the per-block ``tenant_id`` state leaf plus
+each tenant's own top-``hot_k[t]`` hot set) rides in the same single
+device->host sync as the scalar record fields, one (L, T) row set per
+epoch in ``EpochRuntime.tenant_records``.
 """
 from __future__ import annotations
 
@@ -84,7 +98,7 @@ from .placement import Placement, apply_plan, demote_idle
 __all__ = [
     "ALL_POLICIES", "DISPATCH_COUNTS", "TRACE_COUNTS",
     "Counters", "counting",
-    "EpochRecord", "EpochRuntime", "Trajectory",
+    "EpochRecord", "EpochRuntime", "Tenancy", "Trajectory",
 ]
 
 ALL_POLICIES = (
@@ -111,13 +125,52 @@ DISPATCH_COUNTS = {"observe_all": 0, "epoch_step": 0, "reference": 0,
                    "hint_refresh": 0}
 
 
+class _CounterView:
+    """Read-only scope-relative view of one live counter dict: each key reads
+    as (current total) - (total at scope entry).  The live dict is never
+    mutated, so any number of views — nested, overlapping, or read while an
+    inner scope is open — stay correct simultaneously."""
+
+    def __init__(self, live: Dict[str, int]):
+        self._live = live
+        self._base = dict(live)
+
+    def __getitem__(self, key: str) -> int:
+        if key not in self._live:       # fail fast like the dicts it wraps:
+            raise KeyError(key)         # a typo'd gate must not read as 0
+        return self._live[key] - self._base.get(key, 0)
+
+    def get(self, key: str, default: int = 0) -> int:
+        return self[key] if key in self._live else default
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._live
+
+    def __iter__(self):
+        return iter(self._live)
+
+    def keys(self):
+        return self._live.keys()
+
+    def items(self):
+        return [(k, self[k]) for k in self._live]
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, _CounterView):
+            other = dict(other.items())
+        return dict(self.items()) == other
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"_CounterView({dict(self.items())!r})"
+
+
 class Counters(NamedTuple):
-    """The live counter dicts a :func:`counting` block observes (zeroed at
-    entry): per-call dispatches, epoch_step traces, and the telemetry
-    module's observe_all traces."""
-    dispatch: Dict[str, int]
-    trace: Dict[str, int]
-    observe_trace: Dict[str, int]
+    """The scope-relative counter views a :func:`counting` block observes
+    (zero-based at entry): per-call dispatches, epoch_step traces, and the
+    telemetry module's observe_all traces."""
+    dispatch: _CounterView
+    trace: _CounterView
+    observe_trace: _CounterView
 
 
 @contextlib.contextmanager
@@ -126,23 +179,21 @@ def counting():
 
     ``DISPATCH_COUNTS``, ``TRACE_COUNTS`` and ``telemetry.TRACE_COUNTS`` are
     module-level mutable dicts, so raw reads leak activity across tests and
-    benchmark runs.  Inside a ``with counting() as c:`` block all three are
-    zeroed in place (every runtime keeps ticking the same dict objects, so
-    ``c.dispatch`` etc. show exactly the block's activity); on exit the
-    pre-entry totals are added back, so outer accounting stays monotonic and
-    nested/concurrent readers outside the block never see counts vanish.
+    benchmark runs.  ``with counting() as c:`` snapshots all three at entry
+    and hands back views that read each counter relative to that snapshot —
+    ``c.dispatch`` etc. show exactly the activity since the block started.
+
+    The live dicts are never zeroed or restored, which makes the scope
+    safely **nestable**: an earlier implementation zeroed the dicts in
+    place, so re-entering ``counting()`` (as :func:`repro.fleet.run_fleet`
+    does around its per-tenant solo sub-runs) blanked the outer scope's
+    accrual while the inner scope was open.  Now an outer view keeps
+    reading correctly at any point — before, during, and after any number
+    of inner scopes — and inner activity accrues outward, so enclosing
+    accounting stays monotonic.
     """
-    managed = (DISPATCH_COUNTS, TRACE_COUNTS, tel.TRACE_COUNTS)
-    saved = [dict(d) for d in managed]
-    for d in managed:
-        for key in d:
-            d[key] = 0
-    try:
-        yield Counters(*managed)
-    finally:
-        for d, before in zip(managed, saved):
-            for key, val in before.items():
-                d[key] = d.get(key, 0) + val
+    yield Counters(_CounterView(DISPATCH_COUNTS), _CounterView(TRACE_COUNTS),
+                   _CounterView(tel.TRACE_COUNTS))
 
 
 @dataclasses.dataclass
@@ -215,6 +266,60 @@ def _unique_in_order(ids: np.ndarray, k: int) -> np.ndarray:
     return ids[np.sort(first)][:k]
 
 
+class Tenancy(NamedTuple):
+    """Static multi-tenant layout of one shared block space (``repro.fleet``).
+
+    ``offsets`` are the cumulative block offsets of the per-tenant id ranges
+    (length T+1, ``offsets[0] == 0``, ``offsets[-1] == n_blocks``); tenant
+    ``t`` owns global ids ``[offsets[t], offsets[t+1])``.  ``hot_k`` is each
+    tenant's true-hot-set size — the denominator of its per-tenant coverage,
+    i.e. the fast-tier target the tenant would run solo — and ``caps`` are
+    per-tenant admission quotas applied to every lane's migration plan each
+    epoch (``None`` = shared pool, no quota enforcement).  A tenant whose
+    plan is quota-capped still gets its first ``caps[t]`` wanted blocks
+    admitted *unconditionally* whenever ``sum(caps) <= k_hot``, because
+    ``placement.apply_plan`` never evicts a still-wanted resident ahead of a
+    free slot — admission quotas are therefore isolation guarantees, not
+    just rate limits.  Hashable: baked into the fused trace like the rest
+    of ``_FusedCfg``."""
+    offsets: Tuple[int, ...]
+    hot_k: Tuple[int, ...]
+    caps: Optional[Tuple[int, ...]] = None
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(b - a for a, b in zip(self.offsets, self.offsets[1:]))
+
+    def block_tenants(self) -> np.ndarray:
+        """Per-block tenant ids, (n_blocks,) int32 — the fused state leaf."""
+        return np.repeat(np.arange(self.n_tenants, dtype=np.int32),
+                         self.sizes)
+
+    def validate(self, n_blocks: int, k_hot: int) -> None:
+        offs = self.offsets
+        if len(offs) < 2 or offs[0] != 0 or offs[-1] != n_blocks or any(
+                b <= a for a, b in zip(offs, offs[1:])):
+            raise ValueError(f"tenancy offsets must be strictly increasing "
+                             f"from 0 to n_blocks={n_blocks}, got {offs}")
+        if len(self.hot_k) != self.n_tenants or any(
+                not 0 < h <= s for h, s in zip(self.hot_k, self.sizes)):
+            raise ValueError(f"hot_k must give every tenant a size in "
+                             f"(0, n_tenant_blocks], got {self.hot_k}")
+        if self.caps is not None:
+            if len(self.caps) != self.n_tenants or any(
+                    c < 0 for c in self.caps):
+                raise ValueError(f"caps must be one non-negative quota per "
+                                 f"tenant, got {self.caps}")
+            if sum(self.caps) > k_hot:
+                raise ValueError(f"tenant caps sum to {sum(self.caps)} > "
+                                 f"k_hot={k_hot}; quotas must fit the fast "
+                                 f"tier for admission to be guaranteed")
+
+
 # ======================================================  fused device step
 class _FusedCfg(NamedTuple):
     """Hashable static config baked into the epoch_step trace."""
@@ -225,6 +330,7 @@ class _FusedCfg(NamedTuple):
     hint_weight: float
     nb_rate_limit: Optional[int]
     reactive_hot_threshold: Optional[int]
+    tenancy: Optional[Tenancy] = None
 
 
 @jax.tree_util.register_dataclass
@@ -238,6 +344,8 @@ class _FusedState:
     prefetch_rank: jax.Array     # (n_blocks,) f32 lookahead priorities
     prev_hmu: jax.Array          # (n_blocks,) i32 epoch-delta baselines
     prev_pebs: jax.Array
+    tenant_id: jax.Array         # (n_blocks,) i32 tenant of each block
+                                 # (all-zero without a Tenancy)
 
 
 @partial(jax.jit, static_argnames=("cfg", "s_max"), donate_argnums=0)
@@ -335,12 +443,30 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array, *,
                             jnp.asarray(min_keys, jnp.int32))[:, None]
     cap_arr = jnp.asarray(caps, jnp.int32)
 
+    # -- multi-tenant quotas: a segment-capped select replaces the global
+    #    one.  Every unique key row is masked to int32.min outside each
+    #    tenant's own top-caps[t] (selectk.segment_top_k_mask over the
+    #    static tenant bounds), so a lane's top-k candidate list always
+    #    carries every tenant's best blocks BY THAT LANE'S KEY — a noisy
+    #    neighbour can no longer crowd a quieter tenant out of selection.
+    #    Masked entries fail every lane's value gate (all min_keys >= 0).
+    #    The epoch's true hot set stays unmasked: it is workload truth,
+    #    not policy.
+    ten = cfg.tenancy
+    quotas = ten is not None and ten.caps is not None
+    if quotas:
+        protected = selectk.segment_top_k_mask(key_rows, ten.offsets,
+                                               ten.caps)
+        key_rows = jnp.where(protected, key_rows,
+                             jnp.iinfo(jnp.int32).min)
+
     # -- one O(n) selection per unique signal, fanned out to lanes
     vals_u, ids_u, sel_u = selectk.select_top_k(key_rows, k, return_mask=True)
     vals, ids = vals_u[lane_row], ids_u[lane_row]           # (L, k)
 
     # -- account the epoch under the placement that served it (pre-migration)
-    hot = sel_u[hmu_row]                           # epoch's true top-K set
+    hot = (selectk.top_k_mask(d_hmu, k) if quotas
+           else sel_u[hmu_row])                    # epoch's true top-K set
     fast0 = state.placement.fast_mask              # (L, n)
     n_fast = jnp.sum(jnp.where(fast0, d_hmu, 0), axis=-1)
     n_slow = jnp.sum(d_hmu) - n_fast
@@ -369,12 +495,47 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array, *,
         "inter": inter, "resident": resident0,
         "promoted": promoted, "demoted": demoted + pre_demoted,
     }
+    if ten is not None:
+        # Per-tenant accounting: tenant-segment reductions of the same masks
+        # the global record sums, plus each tenant's own true-hot set (top
+        # hot_k[t] of its id range — the coverage target it would have solo).
+        # All outputs are (L, T) scalars-per-tenant; nothing (n,)-sized
+        # leaves the device.
+        tsum = partial(_per_tenant_sum, tenant_id=state.tenant_id,
+                       n_tenants=ten.n_tenants)
+        hot_parts = [
+            selectk.top_k_mask(
+                jax.lax.slice_in_dim(d_hmu, ten.offsets[t],
+                                     ten.offsets[t + 1]),
+                ten.hot_k[t])
+            for t in range(ten.n_tenants)
+        ]
+        t_hot = jnp.concatenate(hot_parts)
+        fast1 = pl.fast_mask
+        out["tenant"] = {
+            "n_fast": tsum(jnp.where(fast0, d_hmu, 0)),
+            "n_slow": tsum(jnp.where(fast0, 0, d_hmu)),
+            "inter": tsum(fast0 & t_hot),
+            "resident": tsum(fast0),
+            "promoted": tsum(fast1 & ~fast0),
+            "demoted": tsum(fast0 & ~fast1),
+        }
     state = _FusedState(
         bundle=bundle, placement=pl, pred=pred_new,
         hint_rank=state.hint_rank, prefetch_rank=state.prefetch_rank,
-        prev_hmu=hmu_now, prev_pebs=pebs_now,
+        prev_hmu=hmu_now, prev_pebs=pebs_now, tenant_id=state.tenant_id,
     )
     return state, out
+
+
+def _per_tenant_sum(x: jax.Array, tenant_id: jax.Array,
+                    n_tenants: int) -> jax.Array:
+    """(..., n_blocks) -> (..., T): segment reduction over the tenant leaf."""
+    flat = x.astype(jnp.int32).reshape((-1, x.shape[-1]))
+    out = jax.vmap(lambda row: jax.ops.segment_sum(
+        row, tenant_id, num_segments=n_tenants,
+        indices_are_sorted=True))(flat)
+    return out.reshape(x.shape[:-1] + (n_tenants,))
 
 
 class EpochRuntime:
@@ -423,6 +584,7 @@ class EpochRuntime:
         fused: bool = True,
         mesh=None,
         mesh_axis: str = "blocks",
+        tenancy: Optional[Tenancy] = None,
     ):
         unknown = set(policies) - set(ALL_POLICIES)
         if unknown:
@@ -453,6 +615,16 @@ class EpochRuntime:
         self._prefetch_pending = 0          # blocks moved at the last boundary
         self._mesh, self._mesh_axis = mesh, mesh_axis
         self.fused = bool(fused)
+        self.tenancy = tenancy
+        # per-epoch per-tenant raw accounting ((L, T) int64 arrays, lane
+        # order = policies); repro.fleet.accounting slices these into
+        # TenantRecord rows with the tenants' own cost-model geometry
+        self.tenant_records: List[Dict[str, np.ndarray]] = []
+        if tenancy is not None:
+            tenancy.validate(self.n_blocks, self.k_hot)
+            self._tenant_id_host = tenancy.block_tenants()
+        else:
+            self._tenant_id_host = np.zeros((self.n_blocks,), np.int32)
         scan = nb_scan_rate if nb_scan_rate is not None else max(n_blocks // 16, 1)
         bundle = tel.bundle_init(
             n_blocks, pebs_period=pebs_period, nb_scan_rate=scan,
@@ -471,6 +643,7 @@ class EpochRuntime:
                 hint_weight=self.hint_weight,
                 nb_rate_limit=self.nb_rate_limit,
                 reactive_hot_threshold=self.reactive_hot_threshold,
+                tenancy=self.tenancy,
             )
             def zeros_n():
                 # distinct buffers (not one shared array) so donation works
@@ -483,6 +656,7 @@ class EpochRuntime:
                 hint_rank=jnp.asarray(self.hint_rank),
                 prefetch_rank=jnp.asarray(self.prefetch_rank),
                 prev_hmu=zeros_n(), prev_pebs=zeros_n(),
+                tenant_id=jnp.asarray(self._tenant_id_host),
             )
             if mesh is not None:
                 self._state = _shard_state(self._state, mesh, mesh_axis)
@@ -513,7 +687,10 @@ class EpochRuntime:
         geometry and cost-model parameters — the scenario supplies what the
         DLRM-shaped callers used to hand-wire (block count, hot-set size,
         per-access and per-block byte sizes, collector rates, memory system).
-        ``overrides`` replace any constructor kwarg (e.g. ``ewma_alpha=``)."""
+        A scenario that carries a ``tenancy`` attribute (a :class:`Tenancy` —
+        ``repro.fleet.FleetScenario`` does) gets its multi-tenant layout and
+        quotas installed too.  ``overrides`` replace any constructor kwarg
+        (e.g. ``ewma_alpha=``)."""
         kw = dict(
             policies=policies,
             system=scenario.system,
@@ -523,6 +700,7 @@ class EpochRuntime:
             nb_scan_rate=scenario.nb_scan_rate,
             hints=hints, prefetch_overlap=prefetch_overlap,
             fused=fused, mesh=mesh, mesh_axis=mesh_axis,
+            tenancy=getattr(scenario, "tenancy", None),
         )
         kw.update(overrides)
         return cls(scenario.n_blocks, scenario.k_hot, **kw)
@@ -634,11 +812,80 @@ class EpochRuntime:
         return int(idle.size)
 
     # -------------------------------------------------------------- decide
+    def _plan_quota(self, lane: _Lane, d_hmu: np.ndarray, d_pebs: np.ndarray,
+                    nb_faults: np.ndarray, epoch_accesses: int,
+                    ) -> Tuple[policy.MigrationPlan, np.ndarray, int]:
+        """Reference decide under per-tenant quotas: the lane's selection key
+        is protected per tenant (each tenant's top ``caps[t]`` keys survive,
+        ties lowest-index-first) and masked to ``int32.min`` elsewhere, then
+        the lane's value/positional gates run on the globally-ordered masked
+        selection — plain numpy sorts, mirroring the spec of the fused
+        segment-capped select (``selectk.segment_top_k_mask``).  Float-keyed
+        lanes go through the same float32 bit-pattern keys the device uses,
+        computed by the same jnp policy helpers, so near-ties cannot split
+        the two paths."""
+        ten, k, n = self.tenancy, self.k_hot, self.n_blocks
+        pre_demoted = 0
+        DISPATCH_COUNTS["reference"] += 1
+
+        def f32_key(x: np.ndarray) -> np.ndarray:
+            return np.ascontiguousarray(
+                np.asarray(x, np.float32)).view(np.int32)
+
+        min_key: int
+        cap = k
+        if lane.name == "hmu_oracle":
+            est, key, min_key = d_hmu, d_hmu, 1
+        elif lane.name == "nb_two_touch":
+            est, key, min_key = nb_faults, nb_faults, 2
+            if self.nb_rate_limit is not None:
+                cap = min(k, self.nb_rate_limit)
+        elif lane.name == "reactive_watermark":
+            est, key = d_hmu, d_hmu
+            pre_demoted = self._demote_untouched(lane, est)
+            cap = min(k, int(np.sum(lane.slot_to_block < 0)))
+            min_key = (self.reactive_hot_threshold
+                       if self.reactive_hot_threshold is not None
+                       else max(2, epoch_accesses // (8 * max(k, 1))))
+        elif lane.name == "proactive_ewma":
+            pred, _ = policy.proactive_ewma(
+                jnp.asarray(lane.pred), jnp.asarray(d_hmu, jnp.float32), k,
+                alpha=self.ewma_alpha)
+            lane.pred = np.asarray(pred)
+            est, key, min_key = lane.pred, f32_key(lane.pred), 1
+        elif lane.name == "hinted":
+            est = d_pebs
+            t_rank = jnp.argsort(jnp.argsort(jnp.asarray(est, jnp.int32)))
+            score = policy.hinted_score(
+                jnp.asarray(est, jnp.int32), t_rank,
+                jnp.asarray(self.hint_rank), self.hint_weight)
+            key, min_key = f32_key(np.asarray(score)), 0
+        elif lane.name == "prefetch":
+            est = self.prefetch_rank
+            key, min_key = f32_key(est), 1
+        else:  # pragma: no cover - guarded in __init__
+            raise ValueError(lane.name)
+
+        key = np.asarray(key, np.int64)
+        protected = np.zeros((n,), bool)
+        for t, tcap in enumerate(ten.caps):
+            off, end = ten.offsets[t], ten.offsets[t + 1]
+            order = np.argsort(-key[off:end], kind="stable")
+            protected[off + order[:tcap]] = True
+        masked = np.where(protected, key, np.iinfo(np.int32).min)
+        ids = np.argsort(-masked, kind="stable")[:k]
+        ok = (masked[ids] >= min_key) & (np.arange(ids.size) < cap)
+        return (policy.MigrationPlan(promote=np.where(ok, ids, -1)),
+                np.asarray(est), pre_demoted)
+
     def _plan(self, lane: _Lane, d_hmu: np.ndarray, d_pebs: np.ndarray,
               nb_faults: np.ndarray, epoch_accesses: int,
               ) -> Tuple[policy.MigrationPlan, np.ndarray, int]:
         """Reference path: one lane's decide step -> (plan, estimate,
         pre-demotions)."""
+        if self.tenancy is not None and self.tenancy.caps is not None:
+            return self._plan_quota(lane, d_hmu, d_pebs, nb_faults,
+                                    epoch_accesses)
         k = self.k_hot
         pre_demoted = 0
         DISPATCH_COUNTS["reference"] += 1
@@ -744,6 +991,10 @@ class EpochRuntime:
             state, jnp.asarray(batches.size, jnp.int32),
             cfg=self._cfg, s_max=s_max)
         out_host = jax.device_get(dev)           # the only per-epoch sync
+        if self.tenancy is not None:
+            self.tenant_records.append({
+                key: np.asarray(val, np.int64)
+                for key, val in out_host.pop("tenant").items()})
         pebs_host = float(out_host["pebs_host"])
         nb_host = float(out_host["nb_host"])
         d_pebs_host = pebs_host - self._prev_pebs_host
@@ -798,11 +1049,23 @@ class EpochRuntime:
         self._prev_pebs_host, self._prev_nb_host = pebs_host, nb_host
 
         epoch_hot = metrics.true_top_k(d_true, self.k_hot)
+        ten = self.tenancy
+        if ten is not None:
+            # per-tenant true-hot mask: top hot_k[t] of each tenant's range
+            # (same stable tie-break as the fused selectk.top_k_mask)
+            t_hot_mask = np.zeros((self.n_blocks,), bool)
+            for t in range(ten.n_tenants):
+                off, end = ten.offsets[t], ten.offsets[t + 1]
+                t_hot_mask[off + metrics.true_top_k(d_true[off:end],
+                                                    ten.hot_k[t])] = True
+            t_rows = {key: [] for key in ("n_fast", "n_slow", "inter",
+                                          "resident", "promoted", "demoted")}
         out: Dict[str, EpochRecord] = {}
         for lane in self._ref_lanes.values():
             # -- account the epoch under the placement that served it
             served = lane.resident_ids().copy()
-            n_fast, n_slow = split_accesses_by_tier(d_true, lane.fast_mask)
+            fast_before = lane.fast_mask.copy()
+            n_fast, n_slow = split_accesses_by_tier(d_true, fast_before)
             host_events = (d_nb_host if lane.name == "nb_two_touch" else
                            d_pebs_host if lane.name == "hinted" else
                            0.0 if lane.name == "prefetch" else drained)
@@ -812,6 +1075,20 @@ class EpochRuntime:
                 lane, d_hmu, d_pebs, nb_faults, epoch_accesses)
             promoted, demoted = self._apply_plan(lane, plan, est)
             inter = int(np.intersect1d(served, epoch_hot).size)
+            if ten is not None:
+                fast_after = lane.fast_mask
+                lane_masks = {
+                    "n_fast": np.where(fast_before, d_true, 0),
+                    "n_slow": np.where(fast_before, 0, d_true),
+                    "inter": fast_before & t_hot_mask,
+                    "resident": fast_before,
+                    "promoted": fast_after & ~fast_before,
+                    "demoted": fast_before & ~fast_after,
+                }
+                for key, arr in lane_masks.items():
+                    t_rows[key].append(np.array([
+                        int(arr[ten.offsets[t]:ten.offsets[t + 1]].sum())
+                        for t in range(ten.n_tenants)], np.int64))
             rec = self._record(
                 lane.name, n_fast=n_fast, n_slow=n_slow,
                 host_events=host_events, promoted=promoted,
@@ -820,6 +1097,9 @@ class EpochRuntime:
             )
             self.records[lane.name].append(rec)
             out[lane.name] = rec
+        if ten is not None:
+            self.tenant_records.append(
+                {key: np.stack(rows) for key, rows in t_rows.items()})
         self.epoch += 1
         return out
 

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "sortable_key", "select_top_k", "top_k_mask", "stable_rank_sparse",
-    "compact",
+    "compact", "segment_top_k_mask",
 ]
 
 _SIGN = jnp.uint32(0x80000000)
@@ -144,6 +144,31 @@ def select_top_k(key: jax.Array, k: int, return_mask: bool = False):
     if return_mask:
         return vals, ids_sorted, sel
     return vals, ids_sorted
+
+
+def segment_top_k_mask(key: jax.Array, bounds, caps) -> jax.Array:
+    """Per-segment top-k membership over static contiguous segments.
+
+    ``key`` (..., n) int32 selection keys; ``bounds`` a static length-(S+1)
+    cumulative offset tuple partitioning the last axis into S segments
+    (``bounds[s]:bounds[s+1]``); ``caps`` a static per-segment selection
+    width.  Returns the (..., n) bool mask marking, within every segment
+    independently, that segment's ``min(caps[s], len)`` largest keys (ties
+    lowest-index-first, exactly :func:`top_k_mask`'s tie-break).
+
+    This is the fused runtime's multi-tenant quota primitive: masking a
+    lane's selection key to ``int32.min`` outside this mask turns the global
+    top-k select into a *segment-capped* select — every tenant keeps its own
+    ``caps[t]`` best candidates in the running no matter how loud a
+    neighbouring tenant's counters are, at the cost of one O(n_t)
+    threshold-select per segment (no sorts).
+    """
+    parts = [
+        top_k_mask(jax.lax.slice_in_dim(key, int(a), int(b), axis=-1),
+                   min(int(cap), int(b) - int(a)))
+        for a, b, cap in zip(bounds, bounds[1:], caps)
+    ]
+    return jnp.concatenate(parts, axis=-1)
 
 
 def stable_rank_sparse(x: jax.Array, max_positive: int) -> jax.Array:

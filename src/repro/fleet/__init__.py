@@ -1,0 +1,35 @@
+"""repro.fleet — multi-tenant telemetry: many workloads, one fast tier.
+
+The paper's HMU argument is ultimately a datacenter argument: device-level
+telemetry pays off when *many* workloads contend for one bounded fast tier —
+the regime TPP (Meta's CXL page placement) and Telescope (terabyte-scale
+telemetry) target.  This package co-locates several
+:class:`~repro.scenarios.AccessScenario`\\ s in one block space and drives
+the six-lane :class:`~repro.core.runtime.EpochRuntime` over the mix:
+
+* :class:`TenantSpec` / :class:`FleetScenario` (``fleet/scenario.py``) —
+  the global<->local id-space mapping, the deterministic per-epoch stream
+  interleave, merged cost-model geometry, composed per-tenant hint layouts.
+  The fleet is itself an ``AccessScenario``: the runtime never learns it is
+  placing four workloads instead of one.
+* :mod:`~repro.fleet.capacity` — shared pool / static partition /
+  weighted-fair quotas, compiled into the :class:`~repro.core.runtime.
+  Tenancy` the fused epoch step enforces on device (segment-capped
+  selection; the epoch stays at exactly 2 dispatches).
+* :mod:`~repro.fleet.accounting` — per-tenant coverage / accuracy /
+  epoch-time rows sliced from the runtime's tenant-segment reductions
+  (scalar-only host sync), re-priced in each tenant's own byte geometry.
+* :func:`run_fleet` — the packaging; ``examples/fleet_mix.py`` shows the
+  headline: under a shared pool a scanning noisy neighbour craters a DLRM
+  tenant's coverage, while weighted-fair quotas hold it near its solo run —
+  the paper's coverage/accuracy limits study, lifted to fleet scale.
+"""
+from .accounting import TenantRecord, tenant_summary, tenant_trajectories
+from .capacity import CAPACITY_POLICIES, fair_quotas, make_tenancy
+from .scenario import FleetScenario, TenantSpec, run_fleet
+
+__all__ = [
+    "CAPACITY_POLICIES", "FleetScenario", "TenantRecord", "TenantSpec",
+    "fair_quotas", "make_tenancy", "run_fleet", "tenant_summary",
+    "tenant_trajectories",
+]

@@ -116,6 +116,50 @@ class HintPipeline:
         )
 
     @staticmethod
+    def for_fleet(
+        n_blocks: int,
+        members: Sequence,
+        depth: int = 1,
+        clip_rank: Optional[int] = None,
+        detector: bool = True,
+    ) -> "HintPipeline":
+        """Composed pipeline for a multi-tenant block space (``repro.fleet``).
+
+        ``members`` is a sequence of ``(offset, layout_or_None)`` pairs, one
+        per tenant, offsets into the concatenated global id space.  Each
+        tenant that has a static layout gets its *own*
+        :class:`StaticTableHints` rank — computed with the tenant's own
+        ``alpha``/``rows_per_page`` prior and its own clip, then scattered
+        into the global array at the tenant's offset.  Tenants are NOT
+        concatenated in rank space: a global Zipf prior over concatenated
+        ranks would push every later tenant's pages under the first
+        tenant's tail (and the default clip would zero them outright), so
+        each tenant's compiler annotates its own hot head and the scales
+        stay comparable (every tenant's hottest block ranks 1.0).  Tenants
+        without a layout contribute zeros — their hinted-lane share falls
+        back to pure telemetry, exactly as solo.  The lookahead window and
+        phase detector span the whole fleet stream (the dataloader queues
+        the interleaved batches, so that IS what the compiler sees).
+        ``clip_rank`` applies per tenant (default: an eighth of the
+        *tenant's* blocks)."""
+        static = np.zeros((int(n_blocks),), np.float32)
+        any_static = False
+        for offset, layout in members:
+            if layout is None or layout.rank_to_page is None:
+                continue
+            clip = (max(layout.n_blocks // 8, 1) if clip_rank is None
+                    else min(int(clip_rank), layout.n_blocks))
+            rank = StaticTableHints(layout, clip_rank=clip).rank
+            static[int(offset):int(offset) + layout.n_blocks] = rank
+            any_static = True
+        return HintPipeline(
+            int(n_blocks),
+            static=static if any_static else None,
+            lookahead=LookaheadWindow(int(n_blocks), depth=depth),
+            detector=PhaseChangeDetector(int(n_blocks)) if detector else None,
+        )
+
+    @staticmethod
     def for_dlrm(
         spec: DLRMTraceSpec,
         seed: int = 0,

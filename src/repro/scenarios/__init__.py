@@ -24,6 +24,9 @@ Scenarios:
 * :class:`MoEExpertScenario` (``scenarios/moe_experts.py``) — expert banks
   placed from router activation counters, replacing the old offline
   ``TieringManager`` flow with online epoch placement.
+* :class:`MmapBenchScenario` (``scenarios/mmap_bench.py``) — the paper's
+  §III.A microbenchmark stream on the online loop; also the noisy-neighbour
+  scanner tenant of the multi-tenant fleet (``repro.fleet``).
 
 The runtime's invariants — fused vs reference bit-identity, exactly 2 jit
 dispatches per epoch (hint refreshes are state-leaf transfers), sharded
@@ -37,9 +40,11 @@ trace-only users of ``run_online`` never pay for it.
 """
 from .base import AccessScenario, build_hints, run_scenario, scenario_summary
 from .dlrm import DLRMScenario, run_online
+from .mmap_bench import MmapBenchScenario
 
 __all__ = [
-    "AccessScenario", "DLRMScenario", "KVCacheScenario", "MoEExpertScenario",
+    "AccessScenario", "DLRMScenario", "KVCacheScenario", "MmapBenchScenario",
+    "MoEExpertScenario",
     "build_hints", "run_online", "run_scenario", "scenario_summary",
 ]
 

@@ -64,7 +64,16 @@ def build_hints(scenario: AccessScenario, depth: int = 1,
                 clip_rank: Optional[int] = None,
                 detector: bool = True) -> HintPipeline:
     """The scenario's default :class:`HintPipeline` — fresh per call, since
-    pipelines are stateful (phase-detector EWMA, cached scaled ranks)."""
+    pipelines are stateful (phase-detector EWMA, cached scaled ranks).
+
+    A scenario may provide its own ``build_pipeline(depth=, clip_rank=,
+    detector=)`` factory, which then wins over the single-layout default:
+    ``repro.fleet.FleetScenario`` uses this to compose per-tenant static
+    hints (one :class:`HintLayout` per tenant, scattered into the global
+    block space) — something a single flat layout cannot express."""
+    build = getattr(scenario, "build_pipeline", None)
+    if build is not None:
+        return build(depth=depth, clip_rank=clip_rank, detector=detector)
     layout = scenario.hint_layout()
     if layout is None:
         layout = HintLayout(scenario.n_blocks)

@@ -400,26 +400,54 @@ def test_prefetch_overlap_time_no_worse_than_stop_the_world():
 
 
 def test_counting_scopes_and_restores_the_counters():
-    """runtime.counting() zeroes all three counter dicts for the block and
-    restores pre-entry totals (plus the block's activity) on exit, so tests
-    and benchmark runs stop leaking dispatch counts into each other."""
+    """runtime.counting() hands back scope-relative views of all three
+    counter dicts (zero-based at entry) and never mutates the live dicts, so
+    tests and benchmark runs stop leaking dispatch counts into each other
+    while module-level totals stay monotonic."""
     rtmod.DISPATCH_COUNTS["observe_all"] += 1    # pre-existing activity
     outer_before = dict(rtmod.DISPATCH_COUNTS)
     rt = EpochRuntime(64, 8, policies=("hmu_oracle",), nb_scan_rate=16)
     rng = np.random.default_rng(0)
     with rtmod.counting() as counts:
-        assert counts.dispatch["observe_all"] == 0           # zeroed at entry
+        assert counts.dispatch["observe_all"] == 0           # zero at entry
         assert counts.trace["epoch_step"] == 0
         assert counts.observe_trace["observe_all"] == 0
         rt.step(rng.integers(0, 64, (2, 100)).astype(np.int32))
         assert counts.dispatch["observe_all"] == 1
         assert counts.dispatch["epoch_step"] == 1
-        assert counts.dispatch is rtmod.DISPATCH_COUNTS      # the live dict
-    # outer totals: what was there before, plus the block's activity
+    # live totals: what was there before, plus the block's activity
     assert rtmod.DISPATCH_COUNTS["observe_all"] == \
         outer_before["observe_all"] + 1
     assert rtmod.DISPATCH_COUNTS["epoch_step"] == \
         outer_before["epoch_step"] + 1
+
+
+def test_counting_is_safely_nestable():
+    """Regression (fleet satellite): re-entering counting() must not blank
+    the outer scope's accrual — run_fleet composes counting() around its
+    per-tenant solo sub-runs inside callers' own counting() scopes.  The
+    outer view must read correctly before, DURING, and after inner scopes
+    (the old zero-in-place implementation blanked the outer view while an
+    inner scope was open), inner activity must accrue outward, and the
+    exception path must not corrupt anything."""
+    base = rtmod.DISPATCH_COUNTS["observe_all"]
+    with rtmod.counting() as outer:
+        rtmod.DISPATCH_COUNTS["observe_all"] += 1
+        with rtmod.counting() as inner:
+            rtmod.DISPATCH_COUNTS["observe_all"] += 2
+            assert inner.dispatch["observe_all"] == 2
+            assert outer.dispatch["observe_all"] == 3    # visible mid-inner
+        assert outer.dispatch["observe_all"] == 3
+        # full-dict comparison works on views (benchmark gate idiom)
+        assert dict(inner.dispatch.items())["observe_all"] == 2
+        try:
+            with rtmod.counting():
+                rtmod.DISPATCH_COUNTS["observe_all"] += 1
+                raise RuntimeError("boom")
+        except RuntimeError:
+            pass
+        assert outer.dispatch["observe_all"] == 4
+    assert rtmod.DISPATCH_COUNTS["observe_all"] == base + 4
 
 
 def test_pending_migration_resets_per_run():
