@@ -24,13 +24,38 @@ Placement` plus the EWMA predictor — resident on device and ``vmap``s the
 policy/migration kernels over the lane axis, so a whole epoch is exactly
 **two dispatches** (``observe_all`` + ``epoch_step``; counted in
 :data:`DISPATCH_COUNTS`, traced-once proven via :data:`TRACE_COUNTS`) and
-only the scalar :class:`EpochRecord` fields cross the device boundary.
+only the :class:`EpochRecord` fields cross the device boundary.
 Per-lane branching is a lane-config tuple (estimate source, selection
 threshold, move cap, hint weight) baked into the trace; top-k selection uses
 :mod:`~repro.core.selectk`'s O(n) kernels instead of full-length sorts.  The
 pre-refactor per-lane host loop (five policy lanes x several small jits +
 four full-array pulls per epoch) is preserved as ``fused=False`` — the
 bit-identity reference and the benchmark baseline.
+
+**Pipelined record sync.**  The record fields themselves are accumulated on
+device: ``_epoch_step`` writes each epoch's scalars, per-lane counters, and
+per-tenant rows into row ``out_row`` of a stacked ``(sync_every,)`` buffer
+pytree (``_FusedState.out_buf`` — ``out_row`` is a traced scalar, so K
+boundaries never retrace), and the host pulls the whole buffer in ONE
+``jax.device_get`` every ``sync_every`` epochs (counted in
+``DISPATCH_COUNTS["record_sync"]``; partial tail flushed on loop exit).
+With ``sync_every=1`` (default) the loop is the historical synchronous one;
+with K>1 the flush happens *after* the next epoch's ``observe_all`` is
+dispatched, so the host assembles :class:`EpochRecord`\\ s — cumulative
+host-tax deltas and the prefetch lane's pending-migration chain replayed in
+dispatch order, hence bit-identical for every K — while the device streams
+ahead.  Both jits donate their state operand (``donate_argnums=0``), so the
+loop also never copies the collector/placement buffers; the telemetry that
+"observes without interfering" finally stops interfering with itself.
+Donation bounds the pipeline depth: a donated operand must be *ready*
+before its dispatch returns, so the host runs at most one epoch ahead of
+the device — enough to overlap all its per-epoch work (hint refresh,
+record assembly) with the in-flight step.  That overlap is real freed time
+wherever host and device are separate resources (accelerator backends, a
+multi-core host); on a single-core CPU host the two share the core and the
+loop is throughput-neutral — which is why the benchmark gates below are
+*structural* (sync count, dispatch count, bit-identity), not a wall-clock
+ratio.
 
 Policy lanes and their telemetry sources:
 
@@ -119,10 +144,14 @@ HMU_DRAIN_COST_S = 2e-9
 # reference path's count grows with every policy-lane jit/eager op and
 # full-array pull it issues.  "hint_refresh" counts HintPipeline refreshes —
 # host-to-device transfers of the rank arrays, not dispatches — so the
-# 2-dispatch/epoch claim stays auditable with hints enabled.
+# 2-dispatch/epoch claim stays auditable with hints enabled.  "record_sync"
+# counts device->host record pulls (one batched ``jax.device_get`` of the
+# stacked ``(sync_every,)`` record buffer): the synchronous loop pays one
+# per epoch, ``sync_every=K`` exactly ceil(n_epochs / K) — the benchmark
+# gate that keeps a reintroduced per-epoch host sync from landing.
 TRACE_COUNTS = {"epoch_step": 0}
 DISPATCH_COUNTS = {"observe_all": 0, "epoch_step": 0, "reference": 0,
-                   "hint_refresh": 0}
+                   "hint_refresh": 0, "record_sync": 0}
 
 
 class _CounterView:
@@ -346,19 +375,57 @@ class _FusedState:
     prev_pebs: jax.Array
     tenant_id: jax.Array         # (n_blocks,) i32 tenant of each block
                                  # (all-zero without a Tenancy)
+    out_buf: Dict[str, jax.Array]
+                                 # stacked (sync_every,)-leading record
+                                 # fields: scalars (K,), per-lane (K, L),
+                                 # per-tenant (K, L, T) — the batched-sync
+                                 # accumulator, donated like everything else
+
+
+def _out_buf_init(sync_every: int, n_lanes: int,
+                  tenancy: Optional[Tenancy]):
+    """Zeroed device accumulator for ``sync_every`` epochs of record fields.
+    Dtypes mirror what ``_epoch_step`` computes (f32 collector scalars, i32
+    lane counts) so the buffered write is a pure row store — pulling row j
+    yields bit-identical values to the per-epoch sync it replaces."""
+    K, L = int(sync_every), int(n_lanes)
+
+    def scal():
+        return jnp.zeros((K,), jnp.float32)
+
+    def lane():
+        return jnp.zeros((K, L), jnp.int32)
+
+    buf = {
+        "drained": scal(), "pebs_host": scal(), "nb_host": scal(),
+        "n_fast": lane(), "n_slow": lane(),
+        "inter": lane(), "resident": lane(),
+        "promoted": lane(), "demoted": lane(),
+    }
+    if tenancy is not None:
+        T = tenancy.n_tenants
+        buf["tenant"] = {
+            key: jnp.zeros((K, L, T), jnp.int32)
+            for key in ("n_fast", "n_slow", "inter", "resident",
+                        "promoted", "demoted")
+        }
+    return buf
 
 
 @partial(jax.jit, static_argnames=("cfg", "s_max"), donate_argnums=0)
-def _epoch_step(state: _FusedState, epoch_accesses: jax.Array, *,
-                cfg: _FusedCfg, s_max: int):
+def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
+                out_row: jax.Array, *, cfg: _FusedCfg, s_max: int):
     """decide + migrate + account for every lane in ONE dispatch.
 
     ``epoch_accesses`` is traced and ``s_max`` (the static PEBS-positives
     bound) is quantized by the caller, so ragged epoch sizes share traces
-    instead of recompiling the five-lane program per unique size.  Returns
-    the next state plus the per-lane integer/scalar outputs the host needs
-    to assemble :class:`EpochRecord`s — nothing (n_blocks,)-sized ever
-    leaves the device.
+    instead of recompiling the five-lane program per unique size.  The
+    per-lane integer/scalar outputs the host needs to assemble
+    :class:`EpochRecord`s are written into row ``row`` (traced, so neither
+    the row position nor a ``sync_every`` boundary retraces) of the
+    donated ``state.out_buf`` accumulator and ride back inside the state —
+    nothing leaves the device until the runtime's batched record sync
+    pulls the stacked buffer, and nothing (n_blocks,)-sized ever does.
     """
     TRACE_COUNTS["epoch_step"] += 1
     lanes, n, k = cfg.lanes, cfg.n_blocks, cfg.k_hot
@@ -520,12 +587,17 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array, *,
             "promoted": tsum(fast1 & ~fast0),
             "demoted": tsum(fast0 & ~fast1),
         }
-    state = _FusedState(
+    # -- append this epoch's record row to the device-side accumulator
+    #    (same pytree structure as out; dtypes fixed by _out_buf_init)
+    out_buf = jax.tree_util.tree_map(
+        lambda buf, v: buf.at[out_row].set(v.astype(buf.dtype)),
+        state.out_buf, out)
+    return _FusedState(
         bundle=bundle, placement=pl, pred=pred_new,
         hint_rank=state.hint_rank, prefetch_rank=state.prefetch_rank,
         prev_hmu=hmu_now, prev_pebs=pebs_now, tenant_id=state.tenant_id,
+        out_buf=out_buf,
     )
-    return state, out
 
 
 def _per_tenant_sum(x: jax.Array, tenant_id: jax.Array,
@@ -561,6 +633,14 @@ class EpochRuntime:
     ``prefetch_overlap`` in [0,1] is how much of the prefetch lane's boundary
     migration streams concurrently with the epoch it serves (0 = the same
     stop-the-world charging every other lane pays).
+
+    ``sync_every=K`` (fused only; default 1) batches the record sync: K
+    epochs of record fields accumulate on device and cross the host
+    boundary in one ``device_get`` — ``step`` then returns the epochs it
+    flushed (a dict of record *lists*, empty until a buffer fills) instead
+    of the K=1 per-epoch record dict, ``run``/``trajectory`` flush the
+    partial tail automatically, and :meth:`flush` drains it on demand after
+    manual stepping.  Trajectories are bit-identical for every K.
     """
 
     def __init__(
@@ -585,6 +665,7 @@ class EpochRuntime:
         mesh=None,
         mesh_axis: str = "blocks",
         tenancy: Optional[Tenancy] = None,
+        sync_every: int = 1,
     ):
         unknown = set(policies) - set(ALL_POLICIES)
         if unknown:
@@ -594,6 +675,14 @@ class EpochRuntime:
             raise ValueError("mesh sharding requires the fused epoch step "
                              "(the reference path keeps lane state on the "
                              "host); pass fused=True or drop mesh")
+        self.sync_every = int(sync_every)
+        if self.sync_every < 1:
+            raise ValueError(f"sync_every must be >= 1, got {sync_every!r}")
+        if self.sync_every > 1 and not fused:
+            raise ValueError("sync_every > 1 batches record syncs in the "
+                             "fused epoch loop; the reference path stays "
+                             "synchronous (it is the bit-identity oracle) — "
+                             "pass fused=True or sync_every=1")
         self.n_blocks = int(n_blocks)
         self.k_hot = min(int(k_hot), self.n_blocks)
         self.system = system
@@ -635,6 +724,7 @@ class EpochRuntime:
         self.records: Dict[str, List[EpochRecord]] = {n: [] for n in policies}
         self._prev_pebs_host = 0.0
         self._prev_nb_host = 0.0
+        self._buffered = 0          # dispatched epochs not yet record-synced
         if self.fused:
             L = len(self._lane_names)
             self._cfg = _FusedCfg(
@@ -657,6 +747,7 @@ class EpochRuntime:
                 prefetch_rank=jnp.asarray(self.prefetch_rank),
                 prev_hmu=zeros_n(), prev_pebs=zeros_n(),
                 tenant_id=jnp.asarray(self._tenant_id_host),
+                out_buf=_out_buf_init(self.sync_every, L, self.tenancy),
             )
             if mesh is not None:
                 self._state = _shard_state(self._state, mesh, mesh_axis)
@@ -729,7 +820,12 @@ class EpochRuntime:
         no epoch to land in.  Surfaced here (and in ``run_online``'s summary)
         so lane-total comparisons can account for it instead of it being
         silently dropped — every other lane charges its final boundary into
-        its last record even though that migration serves no epoch either."""
+        its last record even though that migration serves no epoch either.
+        Flushes the batched record sync first: ``_prefetch_pending`` is
+        replayed during the flush, so a ``sync_every=K`` partial tail must
+        be drained before the value is current."""
+        if self.fused:
+            self._flush_records()
         return self.system.migration_time_s(self._prefetch_pending,
                                             self.block_bytes)
 
@@ -939,10 +1035,12 @@ class EpochRuntime:
             return self._step_fused(batches)
         return self._step_reference(batches)
 
-    def _record(self, name: str, n_fast: float, n_slow: float,
+    def _record(self, name: str, epoch: int, n_fast: float, n_slow: float,
                 host_events: float, promoted: int, demoted: int,
                 resident: int, inter: int) -> EpochRecord:
-        """Shared epoch accounting (host float64 scalar math, both paths)."""
+        """Shared epoch accounting (host float64 scalar math, both paths).
+        ``epoch`` is explicit because the batched sync assembles records
+        for epochs that were dispatched several steps ago."""
         access_s = self.system.access_time_s(
             n_fast, n_slow, self.bytes_per_access)
         per_event = (NB_FAULT_COST_S if name == "nb_two_touch" else
@@ -968,7 +1066,7 @@ class EpochRuntime:
             migration_s = self.system.migration_time_s(
                 promoted + demoted, self.block_bytes)
         return EpochRecord(
-            epoch=self.epoch, lane=name,
+            epoch=epoch, lane=name,
             time_s=access_s + host_tax_s + migration_s - hidden_s,
             access_s=access_s, host_tax_s=host_tax_s, migration_s=migration_s,
             accuracy=(inter / resident) if resident else 0.0,
@@ -977,50 +1075,94 @@ class EpochRuntime:
             host_events=host_events, hidden_s=hidden_s,
         )
 
-    def _step_fused(self, batches: np.ndarray) -> Dict[str, EpochRecord]:
+    def _step_fused(self, batches: np.ndarray):
         state = self._state
         DISPATCH_COUNTS["observe_all"] += 1
         bundle = tel.observe_all(state.bundle, jnp.asarray(batches))
         state = dataclasses.replace(state, bundle=bundle)
+        # Pipelining: this epoch's observe_all is already dispatched when a
+        # full record buffer forces the previous K epochs' batched sync, so
+        # the device never idles against the pull.  (The flush reads
+        # self._state.out_buf — untouched by observe_all, not yet donated
+        # to this epoch's _epoch_step.)
+        flushed: Dict[str, List[EpochRecord]] = {}
+        if self._buffered >= self.sync_every:
+            flushed = self._flush_records()
         # static PEBS-positives bound, quantized to the next power of two so
         # ragged epoch sizes don't retrace the epoch program
         bound = int(batches.size) // state.bundle.pebs.period + 2
         s_max = min(self.n_blocks, 1 << (bound - 1).bit_length())
         DISPATCH_COUNTS["epoch_step"] += 1
-        self._state, dev = _epoch_step(
+        self._state = _epoch_step(
             state, jnp.asarray(batches.size, jnp.int32),
+            jnp.asarray(self._buffered, jnp.int32),
             cfg=self._cfg, s_max=s_max)
-        out_host = jax.device_get(dev)           # the only per-epoch sync
-        if self.tenancy is not None:
-            self.tenant_records.append({
-                key: np.asarray(val, np.int64)
-                for key, val in out_host.pop("tenant").items()})
-        pebs_host = float(out_host["pebs_host"])
-        nb_host = float(out_host["nb_host"])
-        d_pebs_host = pebs_host - self._prev_pebs_host
-        d_nb_host = nb_host - self._prev_nb_host
-        self._prev_pebs_host, self._prev_nb_host = pebs_host, nb_host
-        drained = float(out_host["drained"])
-
-        out: Dict[str, EpochRecord] = {}
-        for i, name in enumerate(self._lane_names):
-            host_events = (d_nb_host if name == "nb_two_touch" else
-                           d_pebs_host if name == "hinted" else
-                           0.0 if name == "prefetch" else drained)
-            rec = self._record(
-                name,
-                n_fast=float(out_host["n_fast"][i]),
-                n_slow=float(out_host["n_slow"][i]),
-                host_events=host_events,
-                promoted=int(out_host["promoted"][i]),
-                demoted=int(out_host["demoted"][i]),
-                resident=int(out_host["resident"][i]),
-                inter=int(out_host["inter"][i]),
-            )
-            self.records[name].append(rec)
-            out[name] = rec
         self.epoch += 1
-        return out
+        self._buffered += 1
+        if self.sync_every == 1:
+            flushed = self._flush_records()   # synchronous loop: pull now
+            return {name: recs[0] for name, recs in flushed.items()}
+        return flushed
+
+    def _flush_records(self) -> Dict[str, List[EpochRecord]]:
+        """Pull the buffered epochs' record fields in ONE device->host sync
+        (``jax.device_get`` of the stacked ``(sync_every,)`` accumulator)
+        and assemble their :class:`EpochRecord`s / per-tenant rows in
+        dispatch order — bit-identical to the per-epoch sync it batches."""
+        n_buf = self._buffered
+        if not self.fused or n_buf == 0:
+            return {}
+        DISPATCH_COUNTS["record_sync"] += 1
+        host = jax.device_get(self._state.out_buf)
+        tenant = host.get("tenant")
+        base = self.epoch - n_buf
+        flushed: Dict[str, List[EpochRecord]] = {
+            name: [] for name in self._lane_names}
+        for j in range(n_buf):                 # rows beyond n_buf are stale
+            pebs_host = float(host["pebs_host"][j])
+            nb_host = float(host["nb_host"][j])
+            d_pebs_host = pebs_host - self._prev_pebs_host
+            d_nb_host = nb_host - self._prev_nb_host
+            self._prev_pebs_host, self._prev_nb_host = pebs_host, nb_host
+            drained = float(host["drained"][j])
+            if tenant is not None:
+                self.tenant_records.append({
+                    key: np.asarray(val[j], np.int64)
+                    for key, val in tenant.items()})
+            for i, name in enumerate(self._lane_names):
+                host_events = (d_nb_host if name == "nb_two_touch" else
+                               d_pebs_host if name == "hinted" else
+                               0.0 if name == "prefetch" else drained)
+                rec = self._record(
+                    name, epoch=base + j,
+                    n_fast=float(host["n_fast"][j, i]),
+                    n_slow=float(host["n_slow"][j, i]),
+                    host_events=host_events,
+                    promoted=int(host["promoted"][j, i]),
+                    demoted=int(host["demoted"][j, i]),
+                    resident=int(host["resident"][j, i]),
+                    inter=int(host["inter"][j, i]),
+                )
+                self.records[name].append(rec)
+                flushed[name].append(rec)
+        self._buffered = 0
+        return flushed
+
+    def flush(self) -> Dict[str, List[EpochRecord]]:
+        """Force the batched record sync for any still-buffered epochs (the
+        ``sync_every=K`` partial tail).  ``run`` calls this on loop exit;
+        call it after manual ``step``-ing with ``sync_every > 1`` before
+        reading ``records``/``tenant_records``.  No-op on the reference
+        path and on an empty buffer."""
+        return self._flush_records()
+
+    def block_until_ready(self) -> "EpochRuntime":
+        """Block until all dispatched device work has finished — the honest
+        stopping point for wall-clock timers under async dispatch (records
+        may already be flushed while the final epoch's state updates are
+        still in flight)."""
+        jax.block_until_ready(self._state if self.fused else self.bundle)
+        return self
 
     def _step_reference(self, batches: np.ndarray) -> Dict[str, EpochRecord]:
         epoch_accesses = int(batches.size)
@@ -1090,7 +1232,7 @@ class EpochRuntime:
                         int(arr[ten.offsets[t]:ten.offsets[t + 1]].sum())
                         for t in range(ten.n_tenants)], np.int64))
             rec = self._record(
-                lane.name, n_fast=n_fast, n_slow=n_slow,
+                lane.name, epoch=self.epoch, n_fast=n_fast, n_slow=n_slow,
                 host_events=host_events, promoted=promoted,
                 demoted=demoted + pre_demoted,
                 resident=int(served.size), inter=inter,
@@ -1114,8 +1256,12 @@ class EpochRuntime:
         migration is cleared on entry, so a runtime reused for a second
         ``run`` does not charge the previous stream's final boundary (already
         surfaced via :attr:`pending_migration_s`) against the new stream's
-        first epoch."""
-        self._prefetch_pending = 0
+        first epoch — and the returned :class:`Trajectory` holds only THIS
+        stream's records (earlier manual ``step``/``run`` history stays in
+        :attr:`records` / :meth:`trajectory`)."""
+        self._flush_records()     # manual-step leftovers belong to their own
+        self._prefetch_pending = 0                              # stream
+        starts = {name: len(recs) for name, recs in self.records.items()}
         depth = self.hints.lookahead_depth if self.hints is not None else 0
         it = iter(epochs)
         buf: deque = deque()                # current epoch + queued lookahead
@@ -1127,9 +1273,15 @@ class EpochRuntime:
             batches = buf.popleft()
             buf.extend(itertools.islice(it, depth - len(buf)))
             self.step(batches, lookahead=tuple(buf))
-        return self.trajectory()
+        self._flush_records()               # sync_every=K partial tail
+        return Trajectory(n_blocks=self.n_blocks, k_hot=self.k_hot,
+                          records={name: recs[starts[name]:]
+                                   for name, recs in self.records.items()})
 
     def trajectory(self) -> Trajectory:
+        """Full record history across every ``step``/``run`` on this runtime
+        (each ``run`` additionally returns its own stream's slice)."""
+        self._flush_records()
         return Trajectory(n_blocks=self.n_blocks, k_hot=self.k_hot,
                           records=self.records)
 

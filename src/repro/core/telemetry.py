@@ -288,6 +288,12 @@ def observe_all(bundle: TelemetryBundle, batches: jax.Array) -> TelemetryBundle:
     boundaries).  The scan applies the identical per-batch update the
     unfused path uses, in the same order, so collector states match the
     per-batch path bit-for-bit.
+
+    The bundle operand is donated (``donate_argnums=0``), like every
+    observe above: the runtime's epoch loop re-uses the collector buffers
+    in place, and — because the call is async-dispatched — the host is
+    already free to flush the previous epochs' batched record sync
+    (``EpochRuntime`` with ``sync_every=K``) while the scan runs.
     """
     TRACE_COUNTS["observe_all"] += 1
 

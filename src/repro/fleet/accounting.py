@@ -2,7 +2,9 @@
 
 The runtime's per-tenant raw counters (``EpochRuntime.tenant_records``: one
 ``(n_lanes, n_tenants)`` int row set per epoch, produced by tenant-segment
-reductions inside the fused epoch step — scalar-only host sync) become
+reductions inside the fused epoch step and pulled on the runtime's batched
+record sync — with ``sync_every=K`` the rows ride the same every-K
+transfer as the global records) become
 :class:`TenantRecord` rows here, re-priced with each tenant's OWN cost-model
 geometry: a tenant's access time uses its own ``bytes_per_access``, its
 migration time its own ``block_bytes``, so a KV page tenant and an expert
@@ -66,7 +68,13 @@ class TenantRecord:
 
 def tenant_trajectories(rt: EpochRuntime, fleet,
                         ) -> Dict[str, Dict[str, List[TenantRecord]]]:
-    """``{tenant: {lane: [TenantRecord per epoch]}}`` from a fleet run."""
+    """``{tenant: {lane: [TenantRecord per epoch]}}`` from a fleet run.
+
+    Flushes the runtime's batched record sync first, so a caller that
+    manually ``step``-ped with ``sync_every > 1`` never reads a partial
+    ``tenant_records`` history."""
+    if rt.fused:
+        rt.flush()                  # sync_every=K partial tail, if any
     if rt.tenancy is None or not rt.tenant_records:
         raise ValueError("runtime has no tenant accounting; build it via "
                          "EpochRuntime.for_scenario on a FleetScenario")

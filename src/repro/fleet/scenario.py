@@ -224,6 +224,7 @@ def run_fleet(
     prefetch_overlap: float = 1.0,
     fused: bool = True,
     mesh=None,
+    sync_every: int = 1,
     epochs=None,
     solo: bool = False,
     **runtime_overrides,
@@ -238,6 +239,10 @@ def run_fleet(
     "tenants"}`` — the tenants section holds one coverage/accuracy/time row
     per tenant per lane per epoch plus headline summaries.
 
+    ``sync_every=K`` batches the runtime's record syncs — the per-tenant
+    ``(n_lanes, n_tenants)`` rows ride the same every-K transfer as the
+    global records, bit-identical for every K.
+
     ``solo=True`` additionally runs every tenant's scenario alone (fresh
     pipelines, same policies) for interference-vs-isolation comparisons,
     each under a nested :func:`~repro.core.runtime.counting` scope whose
@@ -251,7 +256,7 @@ def run_fleet(
     rt = EpochRuntime.for_scenario(
         fleet, policies=tuple(policies), hints=hints or None,
         prefetch_overlap=prefetch_overlap, fused=fused, mesh=mesh,
-        **runtime_overrides)
+        sync_every=sync_every, **runtime_overrides)
     traj = rt.run(fleet.epochs() if epochs is None else epochs)
     out = {
         "trajectory": json.loads(traj.to_json(

@@ -126,6 +126,7 @@ def run_scenario(
     prefetch_overlap: float = 1.0,
     fused: bool = True,
     mesh=None,
+    sync_every: int = 1,
     epochs: Optional[Iterable[np.ndarray]] = None,
     **runtime_overrides,
 ) -> dict:
@@ -145,6 +146,12 @@ def run_scenario(
     still be the scenario's: geometry and accounting assume it).  Extra
     keyword arguments override runtime constructor kwargs (``ewma_alpha=``).
 
+    ``sync_every=K`` batches the runtime's record syncs: the fused loop
+    accumulates K epochs of record fields on device and pulls them in one
+    transfer, so the host never serializes against the device mid-stream.
+    Trajectories are bit-identical for every K (the partial tail is flushed
+    on loop exit); K > 1 requires ``fused=True``.
+
     Returns ``{"trajectory": per-epoch dict, "summary": headline numbers}``.
     """
     if hints is True:
@@ -152,7 +159,7 @@ def run_scenario(
     rt = EpochRuntime.for_scenario(
         scenario, policies=tuple(policies), hints=hints or None,
         prefetch_overlap=prefetch_overlap, fused=fused, mesh=mesh,
-        **runtime_overrides)
+        sync_every=sync_every, **runtime_overrides)
     traj = rt.run(scenario.epochs() if epochs is None else epochs)
     return {
         "trajectory": json.loads(traj.to_json(scenario=scenario.name,

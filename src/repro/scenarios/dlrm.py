@@ -91,6 +91,7 @@ def run_online(
     prefetch_overlap: float = 1.0,
     fused: bool = True,
     mesh=None,
+    sync_every: int = 1,
 ) -> dict:
     """§VI online regime: multi-epoch phase-shifting DLRM trace through the
     EpochRuntime.  The hot set rotates at ``shift_at``; the trajectory shows
@@ -107,7 +108,8 @@ def run_online(
     ``fused`` selects the device-resident two-dispatch epoch loop (default)
     or the per-lane reference path; ``mesh`` (see
     ``launch.mesh.make_telemetry_mesh``) shards all per-page state across
-    devices for paper-scale (5.24 M page) trajectories.
+    devices for paper-scale (5.24 M page) trajectories; ``sync_every=K``
+    batches the fused loop's record syncs (bit-identical for every K).
 
     Returns ``{"trajectory": per-epoch dict, "summary": headline numbers}``.
     """
@@ -118,4 +120,4 @@ def run_online(
     return run_scenario(
         scenario, policies=policies, hints=hints,
         lookahead_depth=lookahead_depth, prefetch_overlap=prefetch_overlap,
-        fused=fused, mesh=mesh)
+        fused=fused, mesh=mesh, sync_every=sync_every)

@@ -221,7 +221,8 @@ def test_fused_epoch_is_two_dispatches_and_one_trace():
         for _ in range(3):
             rt.step(rng.integers(0, n, (3, 1000)).astype(np.int32))
         assert counts.dispatch == {"observe_all": 3, "epoch_step": 3,
-                                   "reference": 0, "hint_refresh": 0}
+                                   "reference": 0, "hint_refresh": 0,
+                                   "record_sync": 3}
         assert counts.trace["epoch_step"] == 0               # no re-trace
 
 
@@ -359,7 +360,8 @@ def test_hint_enabled_fused_epoch_is_still_two_dispatches():
         for _ in range(3):
             rt.step(epoch(), lookahead=(epoch(),))
         assert counts.dispatch == {"observe_all": 3, "epoch_step": 3,
-                                   "reference": 0, "hint_refresh": 3}
+                                   "reference": 0, "hint_refresh": 3,
+                                   "record_sync": 3}
         assert counts.trace["epoch_step"] == 0               # no re-trace
 
 
