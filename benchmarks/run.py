@@ -102,7 +102,7 @@ def table1_dlrm():
 
 # ============================================================= epoch runtime
 def epoch_runtime(json_mode: bool = False, scale: str = "full",
-                  scenarios=None):
+                  scenarios=None, faults: bool = False):
     """Online multi-epoch tiering: fused observe_all + per-epoch migration.
     Emits the full per-epoch trajectory as JSON (the time-series artifact).
 
@@ -142,6 +142,8 @@ def epoch_runtime(json_mode: bool = False, scale: str = "full",
         if scenarios is None and scale == "full":
             scenarios = list(ALL_SCENARIOS)
         _bench_epoch_runtime(dest, scale, scenarios or [])
+        if faults:
+            _bench_faults(dest, scale)
 
 
 ALL_SCENARIOS = ("dlrm", "kv_cache", "moe_experts", "mmap_bench", "fleet")
@@ -417,6 +419,163 @@ def _bench_epoch_runtime(dest: Path, scale: str, scenarios):
         raise SystemExit(1)
 
 
+def _bench_faults(dest: Path, scale: str):
+    """Telemetry-fault sweep -> BENCH_faults.json: coverage/accuracy vs
+    fault rate per lane, naive vs hardened.
+
+    Three injected-degradation curves over one zipf workload — PEBS sample
+    drops (hinted lane), HMU collector resets (oracle lane), NB scan stalls
+    (two-touch lane) — each swept from healthy to fully faulted on the SAME
+    runtime config, so the curve isolates the telemetry fault.  Three gates,
+    CI-fatal like the epoch-runtime ones:
+
+      1. a default-constructed FaultModel reproduces the faults=None run bit
+         for bit (records and final placements);
+      2. the faultiest sweep point still costs exactly 2 dispatches/epoch
+         and one trace of the fused step — injection lives inside the
+         existing dispatches;
+      3. at the max HMU reset rate the hardened lane (quality-gated
+         fallback to PEBS) beats the naive lane's post-fault coverage.
+    """
+    import json
+    from repro.core import runtime as rtmod
+    from repro.core.runtime import EpochRuntime
+    from repro.faults import FaultModel, Hardening
+
+    smoke = scale == "smoke"
+    n = 2_000 if smoke else 20_000
+    k = n // 10
+    n_epochs = 6 if smoke else 10
+    shape = (2, 8_000) if smoke else (4, 20_000)
+    policies = ("hmu_oracle", "hinted", "nb_two_touch")
+    post = n_epochs // 3                       # post-warmup window for means
+
+    rng = np.random.default_rng(17)
+    eps = [(rng.zipf(1.3, size=shape) % n).astype(np.int32)
+           for _ in range(n_epochs)]
+
+    def runtime(**kw):
+        # pebs_period sized so healthy PEBS resolves the top-k (samples >=
+        # 4k per epoch) — the fallback headline measures degraded-HMU vs
+        # healthy-PEBS, not PEBS undersampling
+        period = max(shape[0] * shape[1] // (4 * k), 1)
+        return EpochRuntime(n, k, policies=policies, pebs_period=period,
+                            nb_scan_rate=n // 4, fused=True, **kw)
+
+    def run(**kw):
+        rt = runtime(**kw)
+        with rtmod.counting() as c:
+            t0 = time.perf_counter()
+            rt.run(iter(eps))
+            wall = _elapsed(t0, rt.block_until_ready())
+            disp = (c.dispatch["observe_all"]
+                    + c.dispatch["epoch_step"]) / n_epochs
+            traces = c.trace["epoch_step"]
+        return rt, wall, disp, traces
+
+    def lane_stats(rt, lane):
+        recs = rt.records[lane]
+        return {
+            "coverage": float(np.mean([r.coverage for r in recs[post:]])),
+            "accuracy": float(np.mean([r.accuracy for r in recs[post:]])),
+            "final_quality": float(recs[-1].quality),
+        }
+
+    report = {"scale": scale, "n_blocks": n, "k_hot": k,
+              "n_epochs": n_epochs, "post_window_start": post,
+              "gates": {}, "sweeps": {}}
+    ok = True
+
+    # gate 1: neutral model == no model, bit for bit
+    base, *_ = run()
+    neut, *_ = run(faults=FaultModel.create(n_blocks=n))
+    neutral_ok = all(
+        [a.to_dict() for a in base.records[lane]]
+        == [b.to_dict() for b in neut.records[lane]]
+        and np.array_equal(base.lanes[lane].slot_to_block,
+                           neut.lanes[lane].slot_to_block)
+        for lane in policies)
+    report["gates"]["neutral_bit_identical"] = neutral_ok
+    ok &= neutral_ok
+
+    sweeps = {
+        "pebs_drop": {
+            "lane": "hinted",
+            "rates": [0.0, 0.9] if smoke else [0.0, 0.3, 0.6, 0.9],
+            "model": lambda p: FaultModel.create(pebs_drop_p=p, seed=17,
+                                                 n_blocks=n),
+        },
+        "hmu_reset": {
+            "lane": "hmu_oracle",
+            "rates": [0.0, 1.0] if smoke else [0.0, 0.25, 0.5, 1.0],
+            "model": lambda p: FaultModel.create(
+                reset_p=np.array([p, 0.0, 0.0], np.float32), seed=17,
+                n_blocks=n),
+        },
+        "nb_stall": {
+            "lane": "nb_two_touch",
+            "rates": [0.0, 1.0] if smoke else [0.0, 0.5, 0.9, 1.0],
+            "model": lambda p: FaultModel.create(nb_stall_p=p, seed=17,
+                                                 n_blocks=n),
+        },
+    }
+    disp_max, traces_max = 2.0, 1
+    for name, cfg in sweeps.items():
+        lane, curve = cfg["lane"], []
+        for rate in cfg["rates"]:
+            rt, wall, disp, traces = run(faults=cfg["model"](rate))
+            point = {"rate": rate, "wall_s": wall,
+                     "dispatches_per_epoch": disp, "traces": traces}
+            point.update({ln: lane_stats(rt, ln) for ln in policies})
+            curve.append(point)
+            if rate == max(cfg["rates"]):
+                disp_max, traces_max = disp, traces
+        report["sweeps"][name] = {"lane": lane, "points": curve}
+        lo, hi = curve[0][lane]["coverage"], curve[-1][lane]["coverage"]
+        _row(f"faults_{name}_{lane}", curve[-1]["wall_s"] * 1e6,
+             f"coverage {lo:.2f}->{hi:.2f} over rates {cfg['rates']}")
+
+    # gate 2: the faultiest point still rides the two existing dispatches,
+    # and at most one trace — 0 when an earlier sweep point already traced
+    # the step (rates are traced leaves, so the whole sweep shares a trace)
+    report["gates"]["dispatches_per_epoch"] = disp_max
+    report["gates"]["traced_at_most_once"] = traces_max <= 1
+    ok &= disp_max <= 2 and traces_max <= 1
+
+    # gate 3 + headline: hardened vs naive under the max HMU reset rate
+    worst = sweeps["hmu_reset"]["model"](sweeps["hmu_reset"]["rates"][-1])
+    naive, *_ = run(faults=worst)
+    hard, wall, disp, traces = run(
+        faults=sweeps["hmu_reset"]["model"](
+            sweeps["hmu_reset"]["rates"][-1]),
+        hardening=Hardening.make(fallback={"hmu_oracle": "pebs"},
+                                 demote_hysteresis=2))
+    cn = lane_stats(naive, "hmu_oracle")
+    ch = lane_stats(hard, "hmu_oracle")
+    fallback_ok = (ch["coverage"] > cn["coverage"]
+                   and disp <= 2 and traces <= 1)
+    report["hardened"] = {
+        "fault": "hmu_reset@max", "fallback": {"hmu_oracle": "pebs"},
+        "naive": cn, "hardened": ch,
+        "dispatches_per_epoch": disp, "traces": traces,
+    }
+    report["gates"]["fallback_beats_naive"] = fallback_ok
+    ok &= fallback_ok
+    _row("faults_fallback_hmu_oracle", wall * 1e6,
+         f"naive_cov={cn['coverage']:.2f} hardened_cov={ch['coverage']:.2f} "
+         f"quality={ch['final_quality']:.2f} dispatches={disp:.0f}/ep")
+
+    out_path = dest / ("BENCH_faults.json" if scale == "full"
+                       else "bench_faults.smoke.json")
+    out_path.write_text(json.dumps(report, indent=1))
+    _row("faults_bench_artifact", 0.0, str(out_path))
+    if not ok:
+        print("FAIL: fault bench gate broke — neutral-model bit-identity, "
+              "2-dispatch/1-trace under faults, or hardened-beats-naive "
+              f"(gates={report['gates']})", file=sys.stderr)
+        raise SystemExit(1)
+
+
 # =========================================================== telemetry sweep
 def telemetry_sweep():
     """§V: PEBS coverage vs sampling overhead; HMU log capacity vs drops."""
@@ -534,17 +693,26 @@ def main() -> None:
                     help="epoch_runtime --json: workload scenario(s) to "
                          "bench/gate (repeatable; full scale defaults to "
                          "all, smoke to none)")
+    ap.add_argument("--faults", action="store_true",
+                    help="epoch_runtime --json: sweep telemetry fault rates "
+                         "(drops/resets/stalls), gate neutral-model "
+                         "bit-identity + 2-dispatch epochs + "
+                         "hardened-beats-naive, write results/"
+                         "BENCH_faults.json")
     args = ap.parse_args()
     if args.scenarios and not args.json:
         ap.error("--scenario gates run inside the --json bench; "
                  "add --json (or drop --scenario)")
+    if args.faults and not args.json:
+        ap.error("--faults gates run inside the --json bench; "
+                 "add --json (or drop --faults)")
     print("name,us_per_call,derived")
     for name, fn in ALL.items():
         if args.only and name != args.only:
             continue
         if name == "epoch_runtime":
             fn(json_mode=args.json, scale=args.scale,
-               scenarios=args.scenarios)
+               scenarios=args.scenarios, faults=args.faults)
         else:
             fn()
 

@@ -1,0 +1,114 @@
+"""Degraded telemetry: fault injection + the hardened runtime (PR 7).
+
+The paper measures telemetry *limits* on healthy collectors.  At rack scale
+the collectors themselves fail: HMU drain races wipe counter state, PEBS
+sheds samples under interrupt pressure, the NB scan thread stalls.  A
+tiering daemon that trusts a degraded signal keeps migrating on noise.
+
+This walkthrough injects the worst HMU fault — a collector reset every
+epoch (`reset_p=1.0`: every drain races, deltas turn to garbage) — into
+the §III.B DLRM trace with a mid-run phase shift, and runs the oracle lane
+three ways:
+
+* **healthy**  — no faults: the ceiling (~0.87 coverage, instant recovery);
+* **naive**    — faults on, runtime unchanged: the lane keeps ranking the
+  wrecked HMU deltas and its coverage collapses;
+* **hardened** — same faults plus `repro.faults.Hardening`: an on-device
+  quality estimator (observed mass vs expected, EWMA-smoothed) watches the
+  HMU signal crater and branchlessly swaps the lane's decision input to
+  the healthy PEBS collector; demotion hysteresis stops one garbage epoch
+  from flushing the resident hot set.
+
+Everything — injection, quality, fallback — runs inside the same fused
+2-dispatch epoch; a fault-free FaultModel reproduces the healthy run bit
+for bit.
+
+    PYTHONPATH=src python examples/degraded_telemetry.py
+"""
+import dataclasses
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.core import runtime as rtmod
+from repro.dlrm import datagen
+from repro.faults import FaultModel, Hardening
+from repro.scenarios import DLRMScenario, run_scenario
+
+LANE = "hmu_oracle"
+N_EPOCHS, SHIFT = 10, 5
+spec = dataclasses.replace(datagen.SMALL, lookups_per_batch=30_000)
+
+
+def scenario():
+    return DLRMScenario(spec=spec, n_epochs=N_EPOCHS, batches_per_epoch=2,
+                        shift_at=SHIFT)
+
+
+def hmu_resets():
+    """Every epoch's drain races: HMU counts wiped before the observes."""
+    return FaultModel.create(reset_p=np.array([1.0, 0.0, 0.0], np.float32),
+                             seed=7, n_blocks=scenario().n_blocks)
+
+
+# pebs_period sized so the fallback target actually resolves the hot set
+# (~2.6k samples/epoch for k_hot=250): the point is degraded-HMU vs
+# healthy-PEBS, not PEBS undersampling
+RUN_KW = dict(policies=(LANE, "hinted"), hints=False, pebs_period=23)
+
+healthy = run_scenario(scenario(), **RUN_KW)
+
+# fault-free FaultModel == no FaultModel, bit for bit (the neutral gate CI
+# enforces across single-device / sharded / fleet / every sync_every=K)
+neutral = run_scenario(scenario(), faults=FaultModel.create(
+    n_blocks=scenario().n_blocks), **RUN_KW)
+assert neutral["trajectory"] == healthy["trajectory"]
+
+naive = run_scenario(scenario(), faults=hmu_resets(), **RUN_KW)
+with rtmod.counting() as counts:
+    hard = run_scenario(
+        scenario(), faults=hmu_resets(),
+        hardening=Hardening.make(fallback={LANE: "pebs"},
+                                 demote_hysteresis=2), **RUN_KW)
+dispatches = (counts.dispatch["observe_all"]
+              + counts.dispatch["epoch_step"]) / N_EPOCHS
+
+lanes = {name: out["trajectory"]["lanes"][LANE]
+         for name, out in (("healthy", healthy), ("naive", naive),
+                           ("hardened", hard))}
+sc = scenario()
+print(f"DLRM {sc.n_blocks} pages, k_hot={sc.k_hot}, phase shift at epoch "
+      f"{SHIFT}; HMU collector reset every epoch (drain race, reset_p=1.0); "
+      f"'{LANE}' lane\n")
+print(f"{'epoch':>5s} {'healthy':>8s} {'naive':>8s} {'hardened':>9s} "
+      f"{'quality':>8s}")
+for e in range(N_EPOCHS):
+    q = lanes["hardened"][e]["quality"]
+    print(f"{e:>5d} {lanes['healthy'][e]['coverage']:>8.2f} "
+          f"{lanes['naive'][e]['coverage']:>8.2f} "
+          f"{lanes['hardened'][e]['coverage']:>9.2f} {q:>8.2f}")
+
+# post-warmup means, shift epochs excluded (coverage is 0 there by
+# construction: the hot set moved under every variant)
+steady = [e for e in range(2, N_EPOCHS) if e not in (SHIFT, SHIFT + 1)]
+cov = {name: float(np.mean([rows[e]["coverage"] for e in steady]))
+       for name, rows in lanes.items()}
+q_final = lanes["hardened"][-1]["quality"]
+
+print("\n== Robustness ==")
+print(f"naive: every drain races, so the lane ranks deltas of wrecked "
+      f"counters — coverage {cov['healthy']:.2f} (healthy) -> "
+      f"{cov['naive']:.2f} ✗")
+print(f"hardened: the on-device quality estimator reads the HMU's observed "
+      f"mass at {q_final:.2f} (floor 0.5) and swaps the lane's input to "
+      f"PEBS — coverage holds at {cov['hardened']:.2f} ✓")
+print(f"same fused epoch throughout: {dispatches:.0f} dispatches/epoch, "
+      f"fault injection and fallback both live inside the traced step")
+
+assert cov["naive"] < cov["healthy"] - 0.3    # the fault really bites
+assert cov["hardened"] > cov["naive"] + 0.1   # the fallback really helps
+assert q_final < 0.2                          # and the estimator saw it
+assert dispatches == 2.0

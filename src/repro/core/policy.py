@@ -110,6 +110,36 @@ def prefetch(lookahead_rank: jax.Array, k: int) -> MigrationPlan:
     return MigrationPlan(promote=jnp.where(vals > 0, ids, -1))
 
 
+def quality_estimate(observed_mass: jax.Array,
+                     expected_mass: jax.Array) -> jax.Array:
+    """Per-collector signal quality: the fraction of the expected epoch
+    access mass the collector's (served) epoch-delta estimate actually
+    reported, clipped to [0, 1].  A healthy HMU reports ~1.0 (it counts
+    every access); a healthy PEBS also ~1.0 *after period scaling*.  Drops,
+    saturation and reset events all shrink the observed mass, so one scalar
+    covers every fault lane — this is the on-device signal
+    ``repro.faults.Hardening`` gates its fallback swap on."""
+    return jnp.clip(observed_mass / jnp.maximum(expected_mass, 1.0), 0.0, 1.0)
+
+
+def quality_smooth(prev_q: jax.Array, raw_q: jax.Array,
+                   beta: float) -> jax.Array:
+    """EWMA smoothing of the raw quality signal, so one noisy epoch does not
+    flap the fallback swap (``beta`` = weight of the new observation)."""
+    return beta * raw_q + (1.0 - beta) * prev_q
+
+
+def cold_streak(streak: jax.Array, est: jax.Array,
+                fast_mask: jax.Array) -> jax.Array:
+    """Consecutive cold epochs per resident block: increments where a
+    resident block's epoch estimate is exactly 0, resets to 0 on any touch
+    or when the block is not resident.  Demotion hysteresis gates the
+    watermark lane's ``demote_idle`` on ``streak >= H`` — under lossy
+    telemetry a hot block can *look* cold for an epoch, and without
+    hysteresis one dropped sample costs a demote + re-promote pair."""
+    return jnp.where(fast_mask & (est == 0), streak + 1, 0)
+
+
 def coldest_victims(est_counts: jax.Array, slot_to_block: jax.Array, n: int) -> jax.Array:
     """Pick the n coldest currently-fast blocks as demotion victims."""
     occ = slot_to_block >= 0

@@ -117,6 +117,8 @@ import jax.numpy as jnp
 
 from . import metrics, policy, selectk
 from . import telemetry as tel
+from ..faults.model import (CARRY_BASE, COLLECTORS, LANE_COLLECTOR,
+                            FaultModel, Hardening)
 from .costmodel import CXL_SYSTEM, MemSystem, split_accesses_by_tier
 from .placement import Placement, apply_plan, demote_idle
 
@@ -241,6 +243,9 @@ class EpochRecord:
     demoted: int
     host_events: float       # telemetry events charged this epoch
     hidden_s: float = 0.0    # migration time overlapped away (prefetch lane)
+    quality: float = 1.0     # smoothed quality of the lane's primary
+                             # collector (1.0 without hardening / for the
+                             # collector-free prefetch lane)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -360,6 +365,7 @@ class _FusedCfg(NamedTuple):
     nb_rate_limit: Optional[int]
     reactive_hot_threshold: Optional[int]
     tenancy: Optional[Tenancy] = None
+    hardening: Optional[Hardening] = None
 
 
 @jax.tree_util.register_dataclass
@@ -380,28 +386,59 @@ class _FusedState:
                                  # fields: scalars (K,), per-lane (K, L),
                                  # per-tenant (K, L, T) — the batched-sync
                                  # accumulator, donated like everything else
+    # --- robustness leaves (None = subsystem off; presence keys the trace,
+    #     so a fault-free runtime compiles exactly the seed program) -------
+    prev_true: Optional[jax.Array] = None
+                                 # (n_blocks,) i32 ground-truth baseline;
+                                 # only with faults (d_hmu is no longer the
+                                 # truth, so accounting keeps its own delta)
+    stale: Optional[jax.Array] = None
+                                 # (stale_epochs+1, 3, n_blocks) i32 delay
+                                 # ring of [d_hmu, d_pebs, nb] estimates
+    stale_ptr: Optional[jax.Array] = None      # () i32 ring write position
+    quality: Optional[jax.Array] = None
+                                 # (3,) f32 smoothed per-collector quality
+                                 # (COLLECTORS order; hardening only)
+    prev_nb: Optional[jax.Array] = None
+                                 # (n_blocks,) i32 last served NB faults —
+                                 # the NB quality signal's epoch baseline
+    nb_ewma: Optional[jax.Array] = None
+                                 # () f32 EWMA of NB epoch fault mass (the
+                                 # "expected" NB signal quality divides by)
+    cold_streak: Optional[jax.Array] = None
+                                 # (L, n_blocks) i32 consecutive-cold-epoch
+                                 # counters (demote hysteresis H > 1 only)
 
 
 def _out_buf_init(sync_every: int, n_lanes: int,
-                  tenancy: Optional[Tenancy]):
+                  tenancy: Optional[Tenancy],
+                  hardening: Optional[Hardening] = None):
     """Zeroed device accumulator for ``sync_every`` epochs of record fields.
-    Dtypes mirror what ``_epoch_step`` computes (f32 collector scalars, i32
-    lane counts) so the buffered write is a pure row store — pulling row j
-    yields bit-identical values to the per-epoch sync it replaces."""
+    Dtypes mirror what ``_epoch_step`` computes (hi/lo i32 collector
+    scalars, i32 lane counts) so the buffered write is a pure row store —
+    pulling row j yields bit-identical values to the per-epoch sync it
+    replaces."""
     K, L = int(sync_every), int(n_lanes)
 
     def scal():
-        return jnp.zeros((K,), jnp.float32)
+        return jnp.zeros((K,), jnp.int32)
 
     def lane():
         return jnp.zeros((K, L), jnp.int32)
 
     buf = {
-        "drained": scal(), "pebs_host": scal(), "nb_host": scal(),
+        # collector event scalars ride as exact hi/lo int32 pairs (the
+        # device carries them as faults.Counter64; the host recombines in
+        # float64, exact to 2**53)
+        "drained_hi": scal(), "drained_lo": scal(),
+        "pebs_host_hi": scal(), "pebs_host_lo": scal(),
+        "nb_host_hi": scal(), "nb_host_lo": scal(),
         "n_fast": lane(), "n_slow": lane(),
         "inter": lane(), "resident": lane(),
         "promoted": lane(), "demoted": lane(),
     }
+    if hardening is not None:
+        buf["quality"] = jnp.zeros((K, 3), jnp.float32)
     if tenancy is not None:
         T = tenancy.n_tenants
         buf["tenant"] = {
@@ -429,23 +466,75 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
     """
     TRACE_COUNTS["epoch_step"] += 1
     lanes, n, k = cfg.lanes, cfg.n_blocks, cfg.k_hot
+    har = cfg.hardening
     b = state.bundle
+    faulty = b.faults is not None
 
     # -- drain the HMU log (host tax charged below from the drained count)
     drained = b.hmu.log_used
     bundle = dataclasses.replace(b, hmu=tel.hmu_drain_cost(b.hmu))
 
     # -- epoch-local estimates (deltas against the previous epoch's totals).
-    #    The HMU counter is exact, so d_hmu *is* the epoch's ground truth
-    #    (bit-identical to d_true) — the oracle lane's selection doubles as
-    #    the epoch-hot set and true_counts never needs its own ranking.
+    #    Without faults the HMU counter is exact, so d_hmu *is* the epoch's
+    #    ground truth (bit-identical to d_true) — the oracle lane's selection
+    #    doubles as the epoch-hot set and true_counts never needs its own
+    #    ranking.  With faults the runtime carries its own prev_true
+    #    baseline: accounting stays ground-truth while the lanes see only
+    #    what their (degraded) collectors deliver.
     true_now = b.true_counts
     hmu_now = b.hmu.counts
     pebs_now = b.pebs.sampled * b.pebs.period
     d_hmu = hmu_now - state.prev_hmu
     d_pebs = pebs_now - state.prev_pebs
     nb_faults = b.nb.faults
+    d_true = (true_now - state.prev_true if state.prev_true is not None
+              else d_hmu)
+
+    # -- staleness: the policies read estimates from a delay ring this
+    #    epoch's deltas are only written into — served values are
+    #    stale_epochs old (zeros while the ring warms up).  Accounting
+    #    (d_true) is never delayed: the workload really happened now.
+    if state.stale is not None:
+        depth = state.stale.shape[0]
+        stale_new = state.stale.at[state.stale_ptr].set(
+            jnp.stack([d_hmu, d_pebs, nb_faults]))
+        serve_at = (state.stale_ptr + 1) % depth
+        served = stale_new[serve_at]
+        d_hmu, d_pebs, nb_faults = served[0], served[1], served[2]
+        stale_ptr_new = serve_at
+    else:
+        stale_new = stale_ptr_new = None
+    if faulty:
+        # reset events shrink cumulative collector state, so a delta can go
+        # negative — "no information this epoch", never negative hotness
+        d_hmu = jnp.maximum(d_hmu, 0)
+        d_pebs = jnp.maximum(d_pebs, 0)
     d_hmu_f = d_hmu.astype(jnp.float32)
+
+    # -- per-collector quality: observed epoch mass vs expected (hardening).
+    #    HMU and period-scaled PEBS should both report ~the epoch's access
+    #    mass; NB's expectation is its own smoothed fault-mass history.
+    #    Saturation, drops, resets and stalls all shrink observed mass, so
+    #    one EWMA-smoothed scalar per collector covers every fault lane.
+    if har is not None:
+        exp_mass = jnp.maximum(epoch_accesses.astype(jnp.float32), 1.0)
+        obs_hmu = jnp.sum(d_hmu).astype(jnp.float32)
+        obs_pebs = jnp.sum(d_pebs).astype(jnp.float32)
+        d_nb = jnp.maximum(nb_faults - state.prev_nb, 0)
+        obs_nb = jnp.sum(d_nb).astype(jnp.float32)
+        q_raw = jnp.stack([
+            policy.quality_estimate(obs_hmu, exp_mass),
+            policy.quality_estimate(obs_pebs, exp_mass),
+            jnp.where(state.nb_ewma > 0.0,
+                      policy.quality_estimate(obs_nb, state.nb_ewma), 1.0),
+        ])
+        quality_new = policy.quality_smooth(state.quality, q_raw,
+                                            har.quality_beta)
+        nb_ewma_new = policy.quality_smooth(state.nb_ewma, obs_nb,
+                                            har.quality_beta)
+        prev_nb_new = nb_faults
+    else:
+        quality_new = nb_ewma_new = prev_nb_new = None
 
     thr = (cfg.reactive_hot_threshold
            if cfg.reactive_hot_threshold is not None
@@ -464,20 +553,39 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
         return list(rows).index(rkey)
 
     hmu_row = row("hmu", d_hmu, d_hmu_f)
+    # -- collector fallback (hardening): when a lane's primary collector's
+    #    smoothed quality is below the floor, the lane's selection key AND
+    #    eviction estimate are swapped — branchlessly, one jnp.where on the
+    #    quality scalar — to the named healthy collector's served delta.
+    fb_map = dict(har.fallback) if har is not None else {}
+    col_key = {"hmu": d_hmu, "pebs": d_pebs, "nb": nb_faults}
+
+    def fall_back(name: str, key: jax.Array, est: jax.Array):
+        alt = col_key[fb_map[name]]
+        ok = quality_new[COLLECTORS.index(LANE_COLLECTOR[name])] \
+            >= har.quality_floor
+        return ok, jnp.where(ok, key, alt), \
+            jnp.where(ok, est, alt.astype(jnp.float32))
+
     pred_new = state.pred
-    lane_row, min_keys, caps, is_reactive = [], [], [], []
+    lane_row, min_keys, caps, is_reactive, healthy = [], [], [], [], []
     for name in lanes:
         if name == "hmu_oracle":
             r, min_key, cap = hmu_row, 1, k
+            key, est = d_hmu, d_hmu_f
         elif name == "nb_two_touch":
             cap = k if cfg.nb_rate_limit is None else min(k, cfg.nb_rate_limit)
-            r, min_key = row("nb", nb_faults, nb_faults.astype(jnp.float32)), 2
+            min_key = 2
+            r = row("nb", nb_faults, nb_faults.astype(jnp.float32))
+            key, est = nb_faults, nb_faults.astype(jnp.float32)
         elif name == "reactive_watermark":
             r, min_key, cap = hmu_row, 0, k      # 0 = thr placeholder (traced)
+            key, est = d_hmu, d_hmu_f
         elif name == "proactive_ewma":
             pred_new = (cfg.ewma_alpha * d_hmu_f
                         + (1.0 - cfg.ewma_alpha) * state.pred)
-            r = row("pred", selectk.sortable_key(pred_new), pred_new)
+            key, est = selectk.sortable_key(pred_new), pred_new
+            r = row("pred", key, est)
             min_key, cap = 1, k
         elif name == "hinted":
             # exact argsort(argsort(d_pebs)): positives are bounded by this
@@ -485,8 +593,8 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
             t_rank = selectk.stable_rank_sparse(d_pebs, s_max)
             score = policy.hinted_score(d_pebs, t_rank, state.hint_rank,
                                         cfg.hint_weight)
-            r = row("score", selectk.sortable_key(score),
-                    d_pebs.astype(jnp.float32))
+            key, est = selectk.sortable_key(score), d_pebs.astype(jnp.float32)
+            r = row("score", key, est)
             min_key, cap = 0, k
         elif name == "prefetch":
             # lookahead rank in [0,1]; min_key 1 gates rank > 0 (int32 bits of
@@ -496,6 +604,12 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
             min_key, cap = 1, k
         else:  # pragma: no cover - guarded in __init__
             raise ValueError(name)
+        if name in fb_map:
+            ok, key, est = fall_back(name, key, est)
+            r = row(f"fb:{name}", key, est)
+            healthy.append(ok)
+        else:
+            healthy.append(None)
         lane_row.append(r)
         min_keys.append(min_key)
         caps.append(cap)
@@ -507,7 +621,16 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
     est_lanes = est_rows[lane_row]                          # (L, n) f32
     reactive_arr = jnp.asarray(is_reactive)
     min_key_arr = jnp.where(reactive_arr, thr,
-                            jnp.asarray(min_keys, jnp.int32))[:, None]
+                            jnp.asarray(min_keys, jnp.int32))
+    if fb_map:
+        # a fallen-back lane keys on a raw collector delta whatever its
+        # normal key space was; gate at >= max(min_key, 1) so zero-signal
+        # blocks are never promoted just to fill k
+        healthy_arr = jnp.stack([jnp.asarray(True) if h is None else h
+                                 for h in healthy])
+        min_key_arr = jnp.where(healthy_arr, min_key_arr,
+                                jnp.maximum(min_key_arr, 1))
+    min_key_arr = min_key_arr[:, None]
     cap_arr = jnp.asarray(caps, jnp.int32)
 
     # -- multi-tenant quotas: a segment-capped select replaces the global
@@ -531,18 +654,31 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
     vals_u, ids_u, sel_u = selectk.select_top_k(key_rows, k, return_mask=True)
     vals, ids = vals_u[lane_row], ids_u[lane_row]           # (L, k)
 
-    # -- account the epoch under the placement that served it (pre-migration)
-    hot = (selectk.top_k_mask(d_hmu, k) if quotas
+    # -- account the epoch under the placement that served it
+    #    (pre-migration).  The hot set is workload truth: with faults or
+    #    staleness the hmu selection row no longer ranks the truth, so it
+    #    gets its own exact top-K; otherwise the oracle row doubles as it.
+    hot = (selectk.top_k_mask(d_true, k)
+           if quotas or faulty or state.stale is not None
            else sel_u[hmu_row])                    # epoch's true top-K set
     fast0 = state.placement.fast_mask              # (L, n)
-    n_fast = jnp.sum(jnp.where(fast0, d_hmu, 0), axis=-1)
-    n_slow = jnp.sum(d_hmu) - n_fast
+    n_fast = jnp.sum(jnp.where(fast0, d_true, 0), axis=-1)
+    n_slow = jnp.sum(d_true) - n_fast
     inter = jnp.sum((fast0 & hot).astype(jnp.int32), axis=-1)
     resident0 = state.placement.resident()
 
-    # -- decide: ordered top-k ids per lane, gated per lane config
-    pl, pre_demoted = demote_idle(state.placement, est_lanes,
-                                  reactive_arr[:, None])
+    # -- decide: ordered top-k ids per lane, gated per lane config.  With
+    #    demote hysteresis a resident block must have looked cold for H
+    #    consecutive epochs before the watermark lane frees its slot.
+    demote_enable = reactive_arr[:, None]
+    if state.cold_streak is not None:
+        cold_streak_new = policy.cold_streak(state.cold_streak, est_lanes,
+                                             fast0)
+        demote_enable = demote_enable & (
+            cold_streak_new >= har.demote_hysteresis)
+    else:
+        cold_streak_new = None
+    pl, pre_demoted = demote_idle(state.placement, est_lanes, demote_enable)
     free_slots = jnp.sum((pl.slot_to_block < 0).astype(jnp.int32), axis=-1)
     cap_eff = jnp.where(reactive_arr, jnp.minimum(cap_arr, free_slots),
                         cap_arr)
@@ -553,15 +689,18 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
     # -- migrate: bounded promotion with plan-guarded coldest-victim eviction
     pl, promoted, demoted = apply_plan(pl, want, est_lanes)
 
-    del true_now  # true_counts stays in the bundle; d_hmu already equals it
     out = {
-        "drained": drained,
-        "pebs_host": bundle.pebs.host_events,
-        "nb_host": bundle.nb.host_events,
+        "drained_hi": drained.hi, "drained_lo": drained.lo,
+        "pebs_host_hi": bundle.pebs.host_events.hi,
+        "pebs_host_lo": bundle.pebs.host_events.lo,
+        "nb_host_hi": bundle.nb.host_events.hi,
+        "nb_host_lo": bundle.nb.host_events.lo,
         "n_fast": n_fast, "n_slow": n_slow,
         "inter": inter, "resident": resident0,
         "promoted": promoted, "demoted": demoted + pre_demoted,
     }
+    if har is not None:
+        out["quality"] = quality_new
     if ten is not None:
         # Per-tenant accounting: tenant-segment reductions of the same masks
         # the global record sums, plus each tenant's own true-hot set (top
@@ -572,7 +711,7 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
                        n_tenants=ten.n_tenants)
         hot_parts = [
             selectk.top_k_mask(
-                jax.lax.slice_in_dim(d_hmu, ten.offsets[t],
+                jax.lax.slice_in_dim(d_true, ten.offsets[t],
                                      ten.offsets[t + 1]),
                 ten.hot_k[t])
             for t in range(ten.n_tenants)
@@ -580,8 +719,8 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
         t_hot = jnp.concatenate(hot_parts)
         fast1 = pl.fast_mask
         out["tenant"] = {
-            "n_fast": tsum(jnp.where(fast0, d_hmu, 0)),
-            "n_slow": tsum(jnp.where(fast0, 0, d_hmu)),
+            "n_fast": tsum(jnp.where(fast0, d_true, 0)),
+            "n_slow": tsum(jnp.where(fast0, 0, d_true)),
             "inter": tsum(fast0 & t_hot),
             "resident": tsum(fast0),
             "promoted": tsum(fast1 & ~fast0),
@@ -592,12 +731,20 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
     out_buf = jax.tree_util.tree_map(
         lambda buf, v: buf.at[out_row].set(v.astype(buf.dtype)),
         state.out_buf, out)
-    return _FusedState(
+    updates = dict(
         bundle=bundle, placement=pl, pred=pred_new,
-        hint_rank=state.hint_rank, prefetch_rank=state.prefetch_rank,
-        prev_hmu=hmu_now, prev_pebs=pebs_now, tenant_id=state.tenant_id,
-        out_buf=out_buf,
+        prev_hmu=hmu_now, prev_pebs=pebs_now, out_buf=out_buf,
     )
+    if state.prev_true is not None:
+        updates["prev_true"] = true_now
+    if state.stale is not None:
+        updates.update(stale=stale_new, stale_ptr=stale_ptr_new)
+    if har is not None:
+        updates.update(quality=quality_new, nb_ewma=nb_ewma_new,
+                       prev_nb=prev_nb_new)
+    if state.cold_streak is not None:
+        updates["cold_streak"] = cold_streak_new
+    return dataclasses.replace(state, **updates)
 
 
 def _per_tenant_sum(x: jax.Array, tenant_id: jax.Array,
@@ -666,6 +813,8 @@ class EpochRuntime:
         mesh_axis: str = "blocks",
         tenancy: Optional[Tenancy] = None,
         sync_every: int = 1,
+        faults: Optional[FaultModel] = None,
+        hardening: Optional[Hardening] = None,
     ):
         unknown = set(policies) - set(ALL_POLICIES)
         if unknown:
@@ -675,6 +824,15 @@ class EpochRuntime:
             raise ValueError("mesh sharding requires the fused epoch step "
                              "(the reference path keeps lane state on the "
                              "host); pass fused=True or drop mesh")
+        if (faults is not None or hardening is not None) and not fused:
+            raise ValueError("fault injection / hardening run inside the "
+                             "fused epoch step; the reference path stays "
+                             "the fault-free bit-identity oracle — pass "
+                             "fused=True or drop faults/hardening")
+        if hardening is not None and not isinstance(hardening, Hardening):
+            hardening = Hardening.make(**dict(hardening))
+        if hardening is not None:
+            hardening.validate()
         self.sync_every = int(sync_every)
         if self.sync_every < 1:
             raise ValueError(f"sync_every must be >= 1, got {sync_every!r}")
@@ -714,10 +872,12 @@ class EpochRuntime:
             self._tenant_id_host = tenancy.block_tenants()
         else:
             self._tenant_id_host = np.zeros((self.n_blocks,), np.int32)
+        self.faults = faults
+        self.hardening = hardening
         scan = nb_scan_rate if nb_scan_rate is not None else max(n_blocks // 16, 1)
         bundle = tel.bundle_init(
             n_blocks, pebs_period=pebs_period, nb_scan_rate=scan,
-            hmu_log_capacity=hmu_log_capacity,
+            hmu_log_capacity=hmu_log_capacity, faults=faults,
         )
         self._lane_names = tuple(policies)
         self.epoch = 0
@@ -734,11 +894,30 @@ class EpochRuntime:
                 nb_rate_limit=self.nb_rate_limit,
                 reactive_hot_threshold=self.reactive_hot_threshold,
                 tenancy=self.tenancy,
+                hardening=self.hardening,
             )
             def zeros_n():
                 # distinct buffers (not one shared array) so donation works
                 return jnp.zeros((self.n_blocks,), jnp.int32)
 
+            # robustness leaves exist only when their subsystem is on, so a
+            # fault-free runtime's state structure — and therefore its
+            # compiled epoch program — is exactly the seed one
+            extra = {}
+            if faults is not None:
+                extra["prev_true"] = zeros_n()
+                if faults.stale_epochs > 0:
+                    extra["stale"] = jnp.zeros(
+                        (faults.stale_epochs + 1, 3, self.n_blocks),
+                        jnp.int32)
+                    extra["stale_ptr"] = jnp.zeros((), jnp.int32)
+            if hardening is not None:
+                extra["quality"] = jnp.ones((3,), jnp.float32)
+                extra["nb_ewma"] = jnp.zeros((), jnp.float32)
+                extra["prev_nb"] = zeros_n()
+                if hardening.demote_hysteresis > 1:
+                    extra["cold_streak"] = jnp.zeros(
+                        (L, self.n_blocks), jnp.int32)
             self._state = _FusedState(
                 bundle=bundle,
                 placement=Placement.create(self.n_blocks, self.k_hot, lanes=L),
@@ -747,7 +926,9 @@ class EpochRuntime:
                 prefetch_rank=jnp.asarray(self.prefetch_rank),
                 prev_hmu=zeros_n(), prev_pebs=zeros_n(),
                 tenant_id=jnp.asarray(self._tenant_id_host),
-                out_buf=_out_buf_init(self.sync_every, L, self.tenancy),
+                out_buf=_out_buf_init(self.sync_every, L, self.tenancy,
+                                      self.hardening),
+                **extra,
             )
             if mesh is not None:
                 self._state = _shard_state(self._state, mesh, mesh_axis)
@@ -1037,7 +1218,8 @@ class EpochRuntime:
 
     def _record(self, name: str, epoch: int, n_fast: float, n_slow: float,
                 host_events: float, promoted: int, demoted: int,
-                resident: int, inter: int) -> EpochRecord:
+                resident: int, inter: int,
+                quality: float = 1.0) -> EpochRecord:
         """Shared epoch accounting (host float64 scalar math, both paths).
         ``epoch`` is explicit because the batched sync assembles records
         for epochs that were dispatched several steps ago."""
@@ -1072,7 +1254,7 @@ class EpochRuntime:
             accuracy=(inter / resident) if resident else 0.0,
             coverage=(inter / self.k_hot) if self.k_hot else 0.0,
             resident=resident, promoted=promoted, demoted=demoted,
-            host_events=host_events, hidden_s=hidden_s,
+            host_events=host_events, hidden_s=hidden_s, quality=quality,
         )
 
     def _step_fused(self, batches: np.ndarray):
@@ -1115,16 +1297,23 @@ class EpochRuntime:
         DISPATCH_COUNTS["record_sync"] += 1
         host = jax.device_get(self._state.out_buf)
         tenant = host.get("tenant")
+        qual = host.get("quality")
         base = self.epoch - n_buf
         flushed: Dict[str, List[EpochRecord]] = {
             name: [] for name in self._lane_names}
+
+        def c64(field: str, j: int) -> float:
+            # recombine the exact hi/lo int32 pair in float64 (exact < 2**53)
+            return (float(host[field + "_hi"][j]) * CARRY_BASE
+                    + float(host[field + "_lo"][j]))
+
         for j in range(n_buf):                 # rows beyond n_buf are stale
-            pebs_host = float(host["pebs_host"][j])
-            nb_host = float(host["nb_host"][j])
+            pebs_host = c64("pebs_host", j)
+            nb_host = c64("nb_host", j)
             d_pebs_host = pebs_host - self._prev_pebs_host
             d_nb_host = nb_host - self._prev_nb_host
             self._prev_pebs_host, self._prev_nb_host = pebs_host, nb_host
-            drained = float(host["drained"][j])
+            drained = c64("drained", j)
             if tenant is not None:
                 self.tenant_records.append({
                     key: np.asarray(val[j], np.int64)
@@ -1133,8 +1322,11 @@ class EpochRuntime:
                 host_events = (d_nb_host if name == "nb_two_touch" else
                                d_pebs_host if name == "hinted" else
                                0.0 if name == "prefetch" else drained)
+                col = LANE_COLLECTOR[name]
+                quality = (float(qual[j, COLLECTORS.index(col)])
+                           if qual is not None and col is not None else 1.0)
                 rec = self._record(
-                    name, epoch=base + j,
+                    name, epoch=base + j, quality=quality,
                     n_fast=float(host["n_fast"][j, i]),
                     n_slow=float(host["n_slow"][j, i]),
                     host_events=host_events,

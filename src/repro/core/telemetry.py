@@ -19,18 +19,56 @@ All collectors are functional pytrees; ``observe`` is jit-able and is driven
 with batches of row/page indices (the "physical addresses" in the log).  The
 access stream itself is produced by the workloads (mmap-bench, DLRM, the LM
 embedding / expert / KV layers).
+
+**Fault lanes.**  Real collectors are not perfectly reliable, and the limits
+study only holds if the degraded regimes are modeled too.  When the
+:class:`TelemetryBundle` carries a :class:`repro.faults.FaultModel`
+(``bundle_init(faults=...)``), the fused observe path injects — on device,
+inside the same ``lax.scan``, so the epoch stays one dispatch:
+
+* **HMU counter saturation** — per-block counters clamp at the model's
+  ``hmu_counter_max`` (``2**w - 1`` for a ``w``-bit hardware counter)
+  instead of silently wrapping int32; a saturated block's epoch delta reads
+  0, so a narrow counter makes the *hottest* blocks invisible.  With no
+  model the clamp still applies at int32 max (wrapping is never correct).
+* **PEBS sample drops** — each would-be sample is lost with probability
+  ``pebs_drop_p`` (scalar, or per-block for per-tenant profiles) before the
+  host sees it; the drop count accrues to ``faults.pebs_dropped``.
+* **collector resets** — once per epoch, with per-collector probability
+  ``reset_p``, a collector's cumulative signal state (HMU counts / PEBS
+  sampled histogram / NB fault counts + PTE state) resets to empty.  This
+  models drain races: the epoch deltas the runtime computes against its
+  pre-reset baselines are garbage for one epoch — exactly the signal the
+  degradation machinery in ``core.runtime`` has to survive.
+* **NB scan stalls** — with probability ``nb_stall_p`` per observe call the
+  scanner makes no progress (no unmapping, no cursor advance), so hint
+  faults stop arriving — ``task_numa_work`` skipping its slice under load.
+* **staleness** — ``stale_epochs`` delays the estimates the *policies* see
+  through a ring buffer (a runtime state leaf, not a collector change).
+
+All event scalars (``log_used``/``log_dropped``/``host_events``) are exact
+:class:`repro.faults.Counter64` hi/lo int32 pairs: the float32 scalars they
+replace silently stopped incrementing past 2**24 events, which paper-scale
+runs exceed within one run.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..faults.model import (
+    CARRY_BASE, CARRY_BITS, INT32_MAX, Counter64, FaultModel,
+    counter_add, counter_init, counter_scaled_add, counter_zero_like,
+)
+
 __all__ = [
     "HMUState", "PEBSState", "NBState", "TelemetryBundle",
     "hmu_init", "hmu_observe", "hmu_estimate", "hmu_drain_cost",
+    "hmu_saturated",
     "pebs_init", "pebs_observe", "pebs_estimate",
     "nb_init", "nb_observe", "nb_estimate",
     "bundle_init", "observe_all", "count_observe",
@@ -43,46 +81,69 @@ __all__ = [
 class HMUState:
     """Memory-side exact counters + bounded request-log emulation.
 
-    ``counts`` is what a counter-mode HMU exposes.  ``log_used``/``log_dropped``
-    model the paper's log-DRAM capacity (256 GB on the FPGA card): in log mode
-    every request consumes one record until the log fills; software must drain
-    it (``hmu_drain``) or subsequent records are dropped.  Drops only affect
-    log mode — counter mode never loses events.
+    ``counts`` is what a counter-mode HMU exposes; updates **saturate** at
+    the configured counter width (int32 max by default — a real counter
+    clamps, it never wraps to negative).  ``log_used``/``log_dropped`` model
+    the paper's log-DRAM capacity (256 GB on the FPGA card): in log mode
+    every request consumes one record until the log fills; software must
+    drain it (``hmu_drain_cost``) or subsequent records are dropped.  Drops
+    only affect log mode — counter mode loses events only to saturation.
     """
-    counts: jax.Array          # (n_blocks,) int64-ish exact access counts
-    log_used: jax.Array        # scalar: records currently in the log
-    log_dropped: jax.Array     # scalar: records lost to log overflow
+    counts: jax.Array          # (n_blocks,) int32 saturating access counts
+    log_used: Counter64        # records currently in the log (exact)
+    log_dropped: Counter64     # records lost to log overflow (exact)
     log_capacity: int = dataclasses.field(metadata=dict(static=True))
-    host_events: jax.Array     # scalar: host work units spent (drain only)
+    host_events: Counter64     # host work units spent (drain only; exact)
 
 
 def hmu_init(n_blocks: int, log_capacity: int = 1 << 33) -> HMUState:
-    # Scalar accounting uses float32 (x64 is disabled; these model counters can
-    # exceed int32 range for a 256 GB log -> billions of records).  Distinct
-    # arrays (not one shared buffer) so donation works.
+    # Scalar accounting uses exact hi/lo int32 pairs (x64 is disabled; these
+    # model counters exceed both int32 range AND float32 exactness — a
+    # 256 GB log is billions of records, and float32 stops incrementing at
+    # 2**24).  Distinct arrays per counter so donation works.
     return HMUState(
         counts=jnp.zeros((n_blocks,), jnp.int32),
-        log_used=jnp.zeros((), jnp.float32),
-        log_dropped=jnp.zeros((), jnp.float32),
+        log_used=counter_init(),
+        log_dropped=counter_init(),
         log_capacity=int(log_capacity),
-        host_events=jnp.zeros((), jnp.float32),
+        host_events=counter_init(),
     )
 
 
-def _hmu_observe(state: HMUState, block_ids: jax.Array, weight: int = 1) -> HMUState:
+def _hmu_observe(state: HMUState, block_ids: jax.Array, weight: int = 1,
+                 counter_max: Optional[jax.Array] = None) -> HMUState:
     """Pure (un-jitted) HMU update — shared by the per-batch jit and the
     fused epoch scan so both paths are the *same traced computation* and
-    therefore bit-identical."""
+    therefore bit-identical.  ``counter_max`` is the saturation cap from a
+    :class:`~repro.faults.FaultModel` (scalar or per-block); without one the
+    counters still clamp at int32 max instead of wrapping."""
     flat = block_ids.reshape(-1)
-    counts = state.counts.at[flat].add(weight, mode="drop")
-    n = jnp.asarray(flat.shape[0] * weight, jnp.float32)
-    free = jnp.maximum(jnp.float32(state.log_capacity) - state.log_used, 0.0)
-    appended = jnp.minimum(n, free)
+    n = flat.shape[0] * weight
+    if n >= CARRY_BASE:                      # static shape check
+        raise ValueError(
+            f"one observe call adds {n} events; split calls below "
+            f"{CARRY_BASE} so the hi/lo log counters carry exactly")
+    cap = jnp.int32(INT32_MAX) if counter_max is None else counter_max
+    summed = state.counts.at[flat].add(weight, mode="drop")
+    # Saturate instead of wrapping: a wrapped sum reads *less* than the old
+    # count (two's complement), so `summed < counts` flags exactly the
+    # blocks that crossed int32 max this call (per-call mass << 2**31).
+    counts = jnp.where(summed < state.counts, cap, jnp.minimum(summed, cap))
+    # Log free space in exact hi/lo arithmetic: when at least 2 hi-words
+    # (2**24 records) are free, the whole batch fits; otherwise the exact
+    # small remainder decides.  (The unused free_small product may wrap
+    # int32 for huge free space — it is masked out in exactly that case.)
+    cap_hi = jnp.int32(state.log_capacity >> CARRY_BITS)
+    cap_lo = jnp.int32(state.log_capacity & (CARRY_BASE - 1))
+    diff_hi = cap_hi - state.log_used.hi
+    free_small = diff_hi * CARRY_BASE + (cap_lo - state.log_used.lo)
+    n_arr = jnp.int32(n)
+    appended = jnp.where(diff_hi >= 2, n_arr, jnp.clip(free_small, 0, n_arr))
     return dataclasses.replace(
         state,
         counts=counts,
-        log_used=state.log_used + appended,
-        log_dropped=state.log_dropped + (n - appended),
+        log_used=counter_add(state.log_used, appended),
+        log_dropped=counter_add(state.log_dropped, n_arr - appended),
     )
 
 
@@ -96,13 +157,32 @@ def hmu_estimate(state: HMUState) -> jax.Array:
     return state.counts
 
 
+def hmu_saturated(state: HMUState,
+                  counter_max: Optional[jax.Array] = None) -> jax.Array:
+    """Number of blocks pinned at the saturation cap — the blocks whose
+    epoch deltas now read 0 even while they are the hottest in the system.
+    Pass the :class:`~repro.faults.FaultModel`'s ``hmu_counter_max`` for a
+    width-limited counter; the default audits the int32 clamp."""
+    cap = jnp.int32(INT32_MAX) if counter_max is None else counter_max
+    return jnp.sum((state.counts >= cap).astype(jnp.int32))
+
+
 def hmu_drain_cost(state: HMUState, per_record_cost: float = 1.0) -> HMUState:
     """Host drains/processes the log (paper: 'process the trace immediately').
-    This is the only host cost HMU incurs; NMC (paper §VI) would shrink it."""
+    This is the only host cost HMU incurs; NMC (paper §VI) would shrink it.
+    ``per_record_cost`` must be a small non-negative integer so the exact
+    hi/lo counter math stays exact (scale per-record costs into the
+    time-per-event constants instead)."""
+    cost = float(per_record_cost)
+    if not cost.is_integer() or not 0 <= cost < 64:
+        raise ValueError(f"per_record_cost must be a small non-negative "
+                         f"integer (exact hi/lo counter math), got "
+                         f"{per_record_cost!r}")
     return dataclasses.replace(
         state,
-        host_events=state.host_events + state.log_used * per_record_cost,
-        log_used=jnp.zeros((), jnp.float32),
+        host_events=counter_scaled_add(state.host_events, state.log_used,
+                                       int(cost)),
+        log_used=counter_zero_like(state.log_used),
     )
 
 
@@ -113,7 +193,7 @@ class PEBSState:
     sampled: jax.Array        # (n_blocks,) number of *sampled* hits per block
     cursor: jax.Array         # scalar int32: global access index mod period
     period: int = dataclasses.field(metadata=dict(static=True))
-    host_events: jax.Array    # scalar: one per PEBS record (interrupt+parse)
+    host_events: Counter64    # one per PEBS record (interrupt+parse; exact)
 
 
 def pebs_init(n_blocks: int, period: int = 10007) -> PEBSState:
@@ -121,26 +201,46 @@ def pebs_init(n_blocks: int, period: int = 10007) -> PEBSState:
         sampled=jnp.zeros((n_blocks,), jnp.int32),
         cursor=jnp.zeros((), jnp.int32),
         period=int(period),
-        host_events=jnp.zeros((), jnp.float32),
+        host_events=counter_init(),
+    )
+
+
+def _pebs_sample_mask(state: PEBSState, n: int) -> jax.Array:
+    # cursor is an exact int32 carried modulo period: a float32 cursor is only
+    # exact for streams < 2^24 accesses, so paper-scale epoch streams would
+    # drift the sampling phase.  The modulo keeps it exact forever.
+    idx = state.cursor + jnp.arange(n, dtype=jnp.int32)
+    return (idx % state.period) == 0
+
+
+def _pebs_apply(state: PEBSState, flat: jax.Array,
+                kept: jax.Array) -> PEBSState:
+    # scatter-add only surviving sampled positions (weight 0/1)
+    sampled = state.sampled.at[flat].add(kept.astype(jnp.int32), mode="drop")
+    return dataclasses.replace(
+        state,
+        sampled=sampled,
+        cursor=(state.cursor + flat.shape[0]) % state.period,
+        host_events=counter_add(state.host_events,
+                                jnp.sum(kept).astype(jnp.int32)),
     )
 
 
 def _pebs_observe(state: PEBSState, block_ids: jax.Array) -> PEBSState:
     flat = block_ids.reshape(-1)
-    n = flat.shape[0]
-    # cursor is an exact int32 carried modulo period: a float32 cursor is only
-    # exact for streams < 2^24 accesses, so paper-scale epoch streams would
-    # drift the sampling phase.  The modulo keeps it exact forever.
-    idx = state.cursor + jnp.arange(n, dtype=jnp.int32)
-    hit = (idx % state.period) == 0
-    # scatter-add only sampled positions (weight 0/1)
-    sampled = state.sampled.at[flat].add(hit.astype(jnp.int32), mode="drop")
-    return dataclasses.replace(
-        state,
-        sampled=sampled,
-        cursor=(state.cursor + n) % state.period,
-        host_events=state.host_events + jnp.sum(hit).astype(jnp.float32),
-    )
+    return _pebs_apply(state, flat, _pebs_sample_mask(state, flat.shape[0]))
+
+
+def _pebs_observe_faulty(state: PEBSState, block_ids: jax.Array,
+                         keep: jax.Array) -> Tuple[PEBSState, jax.Array]:
+    """Sampling with Bernoulli event loss: ``keep`` is a per-event survival
+    mask (drawn by the caller from the fault model's ``pebs_drop_p``).  A
+    dropped sample never reaches the host — no histogram update, no host
+    event — and is only visible in the returned drop count."""
+    flat = block_ids.reshape(-1)
+    hit = _pebs_sample_mask(state, flat.shape[0])
+    return (_pebs_apply(state, flat, hit & keep),
+            jnp.sum(hit & ~keep).astype(jnp.int32))
 
 
 @partial(jax.jit, donate_argnums=0)
@@ -175,7 +275,7 @@ class NBState:
     faults: jax.Array        # (n_blocks,) hint-fault counts
     scan_ptr: jax.Array      # scalar cyclic scan position
     scan_rate: int = dataclasses.field(metadata=dict(static=True))
-    host_events: jax.Array   # scalar: hint faults serviced
+    host_events: Counter64   # hint faults serviced (exact)
 
 
 def nb_init(n_blocks: int, scan_rate: int) -> NBState:
@@ -184,15 +284,26 @@ def nb_init(n_blocks: int, scan_rate: int) -> NBState:
         faults=jnp.zeros((n_blocks,), jnp.int32),
         scan_ptr=jnp.zeros((), jnp.int32),
         scan_rate=int(scan_rate),
-        host_events=jnp.zeros((), jnp.float32),
+        host_events=counter_init(),
     )
 
 
-def _nb_observe(state: NBState, block_ids: jax.Array) -> NBState:
+def _nb_observe(state: NBState, block_ids: jax.Array,
+                stalled: Optional[jax.Array] = None) -> NBState:
+    """``stalled`` (a traced bool from the fault model) makes the scanner
+    tick a no-op — no unmapping, no cursor advance — while the workload's
+    touches still re-map pages as usual: faults stop *arriving*, they are
+    not merely delayed, which is what starves the NB lane's signal."""
     n_blocks = state.mapped.shape[0]
     # 1. scanner tick: unmap the next scan_rate blocks (cyclic)
     scan_idx = (state.scan_ptr + jnp.arange(state.scan_rate, dtype=jnp.int32)) % n_blocks
-    mapped = state.mapped.at[scan_idx].set(False)
+    advance = state.scan_rate
+    if stalled is not None:
+        # a stalled tick unmaps nothing: push the indices out of range (the
+        # drop-mode scatter ignores them) and freeze the cursor
+        scan_idx = jnp.where(stalled, n_blocks, scan_idx)
+        advance = jnp.where(stalled, 0, state.scan_rate)
+    mapped = state.mapped.at[scan_idx].set(False, mode="drop")
     # 2. workload touches: first touch of an unmapped block faults
     flat = block_ids.reshape(-1)
     touched = jnp.zeros((n_blocks,), jnp.bool_).at[flat].set(True, mode="drop")
@@ -203,8 +314,9 @@ def _nb_observe(state: NBState, block_ids: jax.Array) -> NBState:
         state,
         mapped=mapped,
         faults=faults,
-        scan_ptr=(state.scan_ptr + state.scan_rate) % n_blocks,
-        host_events=state.host_events + jnp.sum(faulted).astype(jnp.float32),
+        scan_ptr=(state.scan_ptr + advance) % n_blocks,
+        host_events=counter_add(state.host_events,
+                                jnp.sum(faulted).astype(jnp.int32)),
     )
 
 
@@ -231,11 +343,18 @@ class TelemetryBundle:
     ``true_counts`` is the exact access histogram the evaluation compares
     against — it is what an ideal oracle sees, kept on device so the fused
     path never synchronises with the host mid-epoch.
+
+    ``faults`` (an optional :class:`repro.faults.FaultModel`) rides in the
+    same pytree, so fault injection happens inside the same scan and its
+    mutable counters are donated with everything else.  ``None`` keeps the
+    exact fault-free trace — the structure differs, so the two regimes can
+    never share (and therefore never contaminate) a compiled program.
     """
     hmu: HMUState
     pebs: PEBSState
     nb: NBState
     true_counts: jax.Array     # (n_blocks,) int32 exact histogram
+    faults: Optional[FaultModel] = None
 
 
 def bundle_init(
@@ -243,12 +362,24 @@ def bundle_init(
     pebs_period: int = 10007,
     nb_scan_rate: int = 1,
     hmu_log_capacity: int = 1 << 33,
+    faults: Optional[FaultModel] = None,
 ) -> TelemetryBundle:
+    if faults is not None:
+        for name, leaf in (("pebs_drop_p", faults.pebs_drop_p),
+                           ("hmu_counter_max", faults.hmu_counter_max)):
+            if leaf.ndim == 1 and leaf.shape[0] != n_blocks:
+                raise ValueError(f"FaultModel.{name} is per-block with "
+                                 f"{leaf.shape[0]} entries; this bundle has "
+                                 f"n_blocks={n_blocks}")
+        # private copy: the bundle is donated every epoch, so sharing one
+        # model's buffers across runtimes would delete them under the caller
+        faults = jax.tree_util.tree_map(jnp.array, faults)
     return TelemetryBundle(
         hmu=hmu_init(n_blocks, log_capacity=hmu_log_capacity),
         pebs=pebs_init(n_blocks, period=pebs_period),
         nb=nb_init(n_blocks, scan_rate=nb_scan_rate),
         true_counts=jnp.zeros((n_blocks,), jnp.int32),
+        faults=faults,
     )
 
 
@@ -264,12 +395,59 @@ def count_observe(counts: jax.Array, block_ids: jax.Array) -> jax.Array:
 
 
 def _bundle_observe(bundle: TelemetryBundle, block_ids: jax.Array) -> TelemetryBundle:
+    f = bundle.faults
+    if f is None:
+        return TelemetryBundle(
+            hmu=_hmu_observe(bundle.hmu, block_ids),
+            pebs=_pebs_observe(bundle.pebs, block_ids),
+            nb=_nb_observe(bundle.nb, block_ids),
+            true_counts=_count_observe(bundle.true_counts, block_ids),
+        )
+    # fault injection: per-batch Bernoulli draws from the model's traced
+    # rates.  Ground truth is never faulted — it is the evaluation's
+    # reference, not a collector.
+    key, k_drop, k_stall = jax.random.split(f.key, 3)
+    flat = block_ids.reshape(-1)
+    drop_p = (f.pebs_drop_p if f.pebs_drop_p.ndim == 0
+              else f.pebs_drop_p[flat])
+    keep = jax.random.uniform(k_drop, flat.shape) >= drop_p
+    stalled = jax.random.bernoulli(k_stall, f.nb_stall_p)
+    pebs, n_dropped = _pebs_observe_faulty(bundle.pebs, block_ids, keep)
     return TelemetryBundle(
-        hmu=_hmu_observe(bundle.hmu, block_ids),
-        pebs=_pebs_observe(bundle.pebs, block_ids),
-        nb=_nb_observe(bundle.nb, block_ids),
+        hmu=_hmu_observe(bundle.hmu, block_ids,
+                         counter_max=f.hmu_counter_max),
+        pebs=pebs,
+        nb=_nb_observe(bundle.nb, block_ids, stalled=stalled),
         true_counts=_count_observe(bundle.true_counts, block_ids),
+        faults=dataclasses.replace(
+            f, key=key,
+            pebs_dropped=counter_add(f.pebs_dropped, n_dropped),
+            nb_stalls=f.nb_stalls + stalled.astype(jnp.int32)),
     )
+
+
+def _bundle_resets(bundle: TelemetryBundle) -> TelemetryBundle:
+    """Per-epoch collector reset events (drain races): with per-collector
+    probability ``reset_p`` the collector's cumulative signal state snaps
+    back to empty — HMU counts, the PEBS sampled histogram, NB fault counts
+    plus its PTE state (a reset scanner's unmaps are re-established).  The
+    *consumer's* epoch-delta baselines are not touched, which is the point:
+    the next delta the runtime computes is garbage for one epoch, exactly
+    like a log drained underneath the reader."""
+    f = bundle.faults
+    key, kr = jax.random.split(f.key)
+    r = jax.random.uniform(kr, (3,)) < f.reset_p       # COLLECTORS order
+    hmu = dataclasses.replace(
+        bundle.hmu, counts=jnp.where(r[0], 0, bundle.hmu.counts))
+    pebs = dataclasses.replace(
+        bundle.pebs, sampled=jnp.where(r[1], 0, bundle.pebs.sampled))
+    nb = dataclasses.replace(
+        bundle.nb, faults=jnp.where(r[2], 0, bundle.nb.faults),
+        mapped=bundle.nb.mapped | r[2])
+    return dataclasses.replace(
+        bundle, hmu=hmu, pebs=pebs, nb=nb,
+        faults=dataclasses.replace(f, key=key,
+                                   resets=f.resets + r.astype(jnp.int32)))
 
 
 # Python-side trace counter: observe_all's body runs once per (shape, static)
@@ -289,6 +467,11 @@ def observe_all(bundle: TelemetryBundle, batches: jax.Array) -> TelemetryBundle:
     unfused path uses, in the same order, so collector states match the
     per-batch path bit-for-bit.
 
+    With a fault model attached, epoch-granularity reset events are drawn
+    once before the scan and the per-batch injections (drops, stalls,
+    saturation caps) ride inside it — still one dispatch, and a model with
+    all rates at zero leaves every collector value bit-identical.
+
     The bundle operand is donated (``donate_argnums=0``), like every
     observe above: the runtime's epoch loop re-uses the collector buffers
     in place, and — because the call is async-dispatched — the host is
@@ -296,6 +479,8 @@ def observe_all(bundle: TelemetryBundle, batches: jax.Array) -> TelemetryBundle:
     (``EpochRuntime`` with ``sync_every=K``) while the scan runs.
     """
     TRACE_COUNTS["observe_all"] += 1
+    if bundle.faults is not None:
+        bundle = _bundle_resets(bundle)
 
     def step(b: TelemetryBundle, block_ids: jax.Array):
         return _bundle_observe(b, block_ids), None

@@ -1,0 +1,36 @@
+"""repro.faults — telemetry fault injection + degradation-aware tiering.
+
+The collectors in ``repro.core.telemetry`` were perfectly reliable: the only
+modeled fault was HMU log overflow, and no policy lane reacted to degraded
+signal quality.  Real telemetry at terabyte scale is lossy, stale, and
+approximate (Telescope), and real tiering systems fall back when a proactive
+signal goes bad (TPP).  This package supplies both halves:
+
+* :class:`FaultModel` — what can go wrong, as a pytree injected **on device
+  inside the fused observe path**: HMU counter-width saturation, Bernoulli
+  PEBS sample drops, seeded per-collector reset events (drain races),
+  NB scan-cursor stalls, and a ``stale_epochs``-deep delay on the estimates
+  the policies see.  Fault rates are traced leaves (sweeps share one trace);
+  a default-constructed model is bit-identical to running with none.
+* :class:`Hardening` — how the runtime degrades gracefully: demotion
+  hysteresis (H consecutive cold epochs before a watermark demotion), and a
+  branchless per-lane fallback that swaps a lane's decision input to a
+  healthy collector when the primary's observed-mass quality (tracked on
+  device, EWMA-smoothed) drops below a floor.
+* :class:`Counter64` — exact hi/lo int32 scalar counters replacing the
+  float32 event scalars that silently stopped incrementing past 2**24.
+
+Entry points: ``EpochRuntime(faults=, hardening=)``,
+``run_scenario(faults=, hardening=)``, ``run_fleet(faults=, hardening=)``
+with per-tenant profiles via :meth:`FaultModel.for_segments`, the
+``benchmarks/run.py --faults`` sweep, and ``examples/degraded_telemetry.py``.
+"""
+from .model import (
+    COLLECTORS, Counter64, FaultModel, Hardening, LANE_COLLECTOR,
+    counter_add, counter_init, counter_scaled_add, counter_zero_like,
+)
+
+__all__ = [
+    "COLLECTORS", "Counter64", "FaultModel", "Hardening", "LANE_COLLECTOR",
+    "counter_add", "counter_init", "counter_scaled_add", "counter_zero_like",
+]

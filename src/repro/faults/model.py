@@ -1,0 +1,340 @@
+"""Fault-model pytrees: what can go wrong with a telemetry collector.
+
+The paper's limits argument is that tiering quality is bounded by what the
+telemetry can actually deliver — PEBS coverage bounded by its sampling
+period, NB seeing recency instead of frequency, HMU logs overflowing.  The
+seed collectors modeled only the last of those; everything else was
+perfectly reliable.  This module is the configuration half of closing that
+gap (the injection itself lives in ``repro.core.telemetry``, on device,
+inside the fused observe path):
+
+* :class:`FaultModel` — a pytree of fault knobs plus the mutable fault
+  state (PRNG key, drop/reset/stall counters).  All rates are **traced
+  leaves**, so sweeping a fault rate re-uses one compiled epoch program;
+  only ``stale_epochs`` (a buffer shape) and the RNG seed are static.
+  A default-constructed model is *neutral*: every knob at its no-op value,
+  bit-identical records to running with no model at all — the invariant
+  the CI ``--faults`` gate pins.
+* :class:`Hardening` — the degradation-aware runtime config consumed by
+  ``core.runtime``: demotion hysteresis depth, per-lane collector
+  fallbacks, and the quality floor/smoothing that drive the branchless
+  ``jnp.where`` input swap.
+* :class:`Counter64` — an exact hi/lo int32 pair for scalar event
+  counters.  float32 scalars silently stop incrementing past 2**24
+  (adding 1 to 16 777 216.0 is a no-op), which paper-scale runs exceed
+  within one run; x64 is disabled, so exactness comes from carrying the
+  value in two int32 words (the same idiom as the PEBS int32 cursor).
+
+Nothing here imports ``repro.core`` — the dependency points the other way
+(``core.telemetry`` injects these models), so the package stays a leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "COLLECTORS", "Counter64", "FaultModel", "Hardening", "LANE_COLLECTOR",
+    "counter_add", "counter_init", "counter_scaled_add", "counter_zero_like",
+]
+
+# Collector order used everywhere a (3,)-shaped fault/quality array appears.
+COLLECTORS = ("hmu", "pebs", "nb")
+
+INT32_MAX = int(np.iinfo(np.int32).max)
+
+# ====================================================  exact hi/lo counters
+# lo carries the low CARRY_BITS of the value, hi the rest:
+#   value == hi * 2**CARRY_BITS + lo,   0 <= lo < 2**CARRY_BITS.
+# 24 bits keeps every intermediate (lo + delta, small scaled adds) inside
+# int32 while mirroring exactly the boundary float32 breaks at.
+CARRY_BITS = 24
+CARRY_BASE = 1 << CARRY_BITS
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Counter64:
+    """Exact scalar event counter as a hi/lo int32 pair.
+
+    The seed carried HMU ``log_used``/``log_dropped``/``host_events`` as
+    float32 scalars, which are exact only below 2**24: a 256 GB log holds
+    billions of records, so paper-scale runs silently stopped counting.
+    Two int32 words hold the value exactly to 2**53-ish (host reads combine
+    them in float64 / Python int, both exact at any realistic count).
+    """
+    hi: jax.Array                # () int32: value >> CARRY_BITS
+    lo: jax.Array                # () int32: value & (CARRY_BASE - 1)
+
+    def value(self) -> int:
+        """Exact host-side read (concrete arrays only)."""
+        return int(self.hi) * CARRY_BASE + int(self.lo)
+
+    def __float__(self) -> float:
+        return float(self.value())
+
+    def __int__(self) -> int:
+        return self.value()
+
+
+def counter_init() -> Counter64:
+    # distinct arrays (not one shared buffer) so donation works
+    return Counter64(hi=jnp.zeros((), jnp.int32), lo=jnp.zeros((), jnp.int32))
+
+
+def counter_zero_like(c: Counter64) -> Counter64:
+    return Counter64(hi=jnp.zeros_like(c.hi), lo=jnp.zeros_like(c.lo))
+
+
+def counter_add(c: Counter64, n) -> Counter64:
+    """``c + n`` for a non-negative int32 delta ``n`` (traced or static),
+    ``n < 2**30`` so ``lo + n`` cannot overflow int32 before the carry."""
+    lo2 = c.lo + jnp.asarray(n, jnp.int32)
+    return Counter64(hi=c.hi + (lo2 >> CARRY_BITS),
+                     lo=lo2 & (CARRY_BASE - 1))
+
+
+def counter_scaled_add(c: Counter64, other: Counter64, scale: int) -> Counter64:
+    """``c + other * scale`` for a small static non-negative int ``scale``
+    (bounded so ``other.lo * scale`` stays inside int32)."""
+    scale = int(scale)
+    if not 0 <= scale < 64:
+        raise ValueError(f"scale must be a small non-negative int "
+                         f"(0 <= scale < 64), got {scale!r}")
+    lo2 = c.lo + other.lo * scale
+    return Counter64(hi=c.hi + other.hi * scale + (lo2 >> CARRY_BITS),
+                     lo=lo2 & (CARRY_BASE - 1))
+
+
+# ==========================================================  the fault model
+def _rate_leaf(p, n_blocks: Optional[int], name: str) -> jax.Array:
+    """Probability knob as a traced f32 leaf: scalar, or per-block for
+    per-tenant fault profiles (``FaultModel.for_segments``)."""
+    arr = jnp.asarray(p, jnp.float32)
+    if arr.ndim not in (0, 1):
+        raise ValueError(f"{name} must be a scalar or (n_blocks,) array, "
+                         f"got shape {arr.shape}")
+    if arr.ndim == 1 and n_blocks is not None and arr.shape[0] != n_blocks:
+        raise ValueError(f"{name} per-block array has {arr.shape[0]} entries, "
+                         f"expected n_blocks={n_blocks}")
+    vals = np.asarray(arr)
+    if vals.size and (vals.min() < 0.0 or vals.max() > 1.0):
+        raise ValueError(f"{name} is a probability and must lie in [0, 1], "
+                         f"got range [{vals.min()}, {vals.max()}]")
+    return arr
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Collector fault knobs + mutable fault state, injected on device.
+
+    Config leaves (traced, so a fault-rate sweep shares one epoch trace):
+
+    * ``hmu_counter_max`` — HMU counters saturate at this value instead of
+      wrapping int32 (scalar or per-block).  ``2**bits - 1`` for a
+      ``bits``-wide hardware counter; int32 max is the neutral value.
+    * ``pebs_drop_p``    — each would-be PEBS sample is lost before the
+      host sees it with this probability (scalar or per-block): the
+      paper's point that sampling beyond the period is *also* lossy.
+    * ``reset_p``        — (3,) per-collector probability, once per epoch,
+      that the collector's cumulative signal state resets to empty
+      (models drain races: the consumer and the collector disagree about
+      what was already read).
+    * ``nb_stall_p``     — per-batch probability the NB scanner makes no
+      progress (no unmapping, no cursor advance): ``task_numa_work``
+      skipping its slice under load.
+
+    Static: ``stale_epochs`` (policy estimates are served from a ring
+    buffer this many epochs deep — a shape) and ``seed``.
+
+    Mutable leaves (updated inside the fused observe path): the PRNG key
+    and the degradation counters the quality machinery / benchmarks read
+    back — ``pebs_dropped`` (exact :class:`Counter64`), per-collector
+    ``resets``, and ``nb_stalls``.
+    """
+    hmu_counter_max: jax.Array       # () or (n_blocks,) int32 saturation cap
+    pebs_drop_p: jax.Array           # () or (n_blocks,) f32
+    reset_p: jax.Array               # (3,) f32 — COLLECTORS order
+    nb_stall_p: jax.Array            # () f32
+    key: jax.Array                   # PRNG key (uint32 pair)
+    pebs_dropped: Counter64          # events lost to Bernoulli drops
+    resets: jax.Array                # (3,) int32 — resets applied so far
+    nb_stalls: jax.Array             # () int32 — stalled scanner ticks
+    stale_epochs: int = dataclasses.field(metadata=dict(static=True))
+    seed: int = dataclasses.field(metadata=dict(static=True))
+
+    @classmethod
+    def create(
+        cls,
+        hmu_counter_bits: int = 31,
+        pebs_drop_p=0.0,
+        reset_p=0.0,
+        nb_stall_p: float = 0.0,
+        stale_epochs: int = 0,
+        seed: int = 0,
+        n_blocks: Optional[int] = None,
+        hmu_counter_max=None,
+    ) -> "FaultModel":
+        """Build a model from human-sized knobs.  All defaults are the
+        neutral no-op values — ``FaultModel.create()`` must be (and is
+        CI-gated to be) bit-identical to running without a model.
+
+        ``reset_p`` is a scalar (same rate for all three collectors) or a
+        3-sequence in :data:`COLLECTORS` order.  ``pebs_drop_p`` and
+        ``hmu_counter_max`` may be per-block arrays (see
+        :meth:`for_segments`); pass ``n_blocks`` to validate their length.
+        """
+        if hmu_counter_max is None:
+            bits = int(hmu_counter_bits)
+            if not 1 <= bits <= 31:
+                raise ValueError(f"hmu_counter_bits must be in [1, 31], "
+                                 f"got {hmu_counter_bits!r}")
+            hmu_counter_max = (1 << bits) - 1
+        cap = jnp.asarray(hmu_counter_max, jnp.int32)
+        if cap.ndim == 1 and n_blocks is not None and cap.shape[0] != n_blocks:
+            raise ValueError(f"hmu_counter_max per-block array has "
+                             f"{cap.shape[0]} entries, expected {n_blocks}")
+        rp = np.asarray(reset_p, np.float32)
+        if rp.ndim == 0:
+            rp = np.full((3,), rp, np.float32)
+        if rp.shape != (3,):
+            raise ValueError(f"reset_p must be a scalar or one rate per "
+                             f"collector {COLLECTORS}, got shape {rp.shape}")
+        stale = int(stale_epochs)
+        if stale < 0:
+            raise ValueError(f"stale_epochs must be >= 0, got {stale_epochs!r}")
+        return cls(
+            hmu_counter_max=cap,
+            pebs_drop_p=_rate_leaf(pebs_drop_p, n_blocks, "pebs_drop_p"),
+            reset_p=jnp.asarray(rp),
+            nb_stall_p=jnp.asarray(float(nb_stall_p), jnp.float32),
+            key=jax.random.PRNGKey(int(seed)),
+            pebs_dropped=counter_init(),
+            resets=jnp.zeros((3,), jnp.int32),
+            nb_stalls=jnp.zeros((), jnp.int32),
+            stale_epochs=stale,
+            seed=int(seed),
+        )
+
+    @classmethod
+    def for_segments(
+        cls,
+        offsets: Sequence[int],
+        profiles: Sequence[Optional[dict]],
+        **global_kwargs,
+    ) -> "FaultModel":
+        """Per-segment fault profile over one shared block space — the
+        fleet's per-tenant degradation.  ``offsets`` are the cumulative
+        segment bounds (length T+1, same convention as ``runtime.Tenancy``);
+        ``profiles[t]`` is a dict of *per-block-expressible* knobs for
+        segment ``t`` (``pebs_drop_p``, ``hmu_counter_bits`` /
+        ``hmu_counter_max``) or None for a healthy segment.  Collector-wide
+        knobs (``reset_p``, ``nb_stall_p``, ``stale_epochs``, ``seed``) are
+        global — a drain race or a stalled scanner hits every tenant — and
+        come in through ``global_kwargs``."""
+        offsets = tuple(int(o) for o in offsets)
+        if len(offsets) != len(profiles) + 1:
+            raise ValueError(f"need len(offsets) == len(profiles) + 1, got "
+                             f"{len(offsets)} offsets for {len(profiles)} "
+                             f"profiles")
+        n_blocks = offsets[-1]
+        drop_p = np.zeros((n_blocks,), np.float32)
+        cap = np.full((n_blocks,), INT32_MAX, np.int32)
+        per_block_keys = {"pebs_drop_p", "hmu_counter_bits", "hmu_counter_max"}
+        for t, prof in enumerate(profiles):
+            if prof is None:
+                continue
+            unknown = set(prof) - per_block_keys
+            if unknown:
+                raise ValueError(
+                    f"segment profile {t} has non-per-block knobs "
+                    f"{sorted(unknown)}; collector-wide knobs (reset_p, "
+                    f"nb_stall_p, stale_epochs, seed) are global kwargs")
+            sl = slice(offsets[t], offsets[t + 1])
+            if "pebs_drop_p" in prof:
+                drop_p[sl] = float(prof["pebs_drop_p"])
+            if "hmu_counter_max" in prof:
+                cap[sl] = int(prof["hmu_counter_max"])
+            elif "hmu_counter_bits" in prof:
+                cap[sl] = (1 << int(prof["hmu_counter_bits"])) - 1
+        return cls.create(hmu_counter_max=cap, pebs_drop_p=drop_p,
+                          n_blocks=n_blocks, **global_kwargs)
+
+
+# ======================================================  hardening config
+# Which collector each policy lane's decision input comes from (the prefetch
+# lane runs on compiler hints, not a collector — it has nothing to fall back
+# from and never degrades with the telemetry).
+LANE_COLLECTOR: Dict[str, Optional[str]] = {
+    "hmu_oracle": "hmu",
+    "reactive_watermark": "hmu",
+    "proactive_ewma": "hmu",
+    "nb_two_touch": "nb",
+    "hinted": "pebs",
+    "prefetch": None,
+}
+
+
+class Hardening(NamedTuple):
+    """Degradation-aware runtime config (static; baked into the fused trace).
+
+    * ``demote_hysteresis`` — a resident block must look cold for this many
+      *consecutive* epochs before watermark demotion frees it (H=1 is the
+      seed behaviour).  Lossy telemetry makes a hot block look cold for an
+      epoch; without hysteresis one dropped sample costs two migrations.
+    * ``fallback`` — ``(lane, collector)`` pairs: when the lane's primary
+      collector's smoothed quality drops below ``quality_floor``, the
+      lane's decision input is swapped — branchlessly, ``jnp.where`` on
+      the quality scalar — to the named healthy collector's estimate.
+    * ``quality_floor`` / ``quality_beta`` — the swap threshold and the
+      EWMA smoothing of the per-collector observed-mass quality signal.
+
+    Use :meth:`make` to build from a ``{lane: collector}`` dict.
+    """
+    demote_hysteresis: int = 1
+    fallback: Tuple[Tuple[str, str], ...] = ()
+    quality_floor: float = 0.5
+    quality_beta: float = 0.5
+
+    @classmethod
+    def make(cls, fallback: Optional[Dict[str, str]] = None,
+             demote_hysteresis: int = 1, quality_floor: float = 0.5,
+             quality_beta: float = 0.5) -> "Hardening":
+        items = (fallback.items() if isinstance(fallback, dict)
+                 else (fallback or ()))
+        pairs = tuple(sorted(dict(items).items()))
+        h = cls(demote_hysteresis=int(demote_hysteresis), fallback=pairs,
+                quality_floor=float(quality_floor),
+                quality_beta=float(quality_beta))
+        h.validate()
+        return h
+
+    def validate(self) -> None:
+        if self.demote_hysteresis < 1:
+            raise ValueError(f"demote_hysteresis must be >= 1, got "
+                             f"{self.demote_hysteresis!r}")
+        if not 0.0 <= self.quality_floor <= 1.0:
+            raise ValueError(f"quality_floor must be in [0, 1], got "
+                             f"{self.quality_floor!r}")
+        if not 0.0 < self.quality_beta <= 1.0:
+            raise ValueError(f"quality_beta must be in (0, 1], got "
+                             f"{self.quality_beta!r}")
+        for lane, col in self.fallback:
+            if lane not in LANE_COLLECTOR:
+                raise ValueError(f"unknown fallback lane {lane!r}; choose "
+                                 f"from {sorted(LANE_COLLECTOR)}")
+            if LANE_COLLECTOR[lane] is None:
+                raise ValueError(f"lane {lane!r} runs on compiler hints, "
+                                 f"not a collector — nothing to fall back "
+                                 f"from")
+            if col not in COLLECTORS:
+                raise ValueError(f"unknown fallback collector {col!r}; "
+                                 f"choose from {COLLECTORS}")
+            if col == LANE_COLLECTOR[lane]:
+                raise ValueError(f"lane {lane!r} already reads {col!r}; a "
+                                 f"fallback must name a different collector")

@@ -215,6 +215,22 @@ class FleetScenario:
             [(t.offset, t.scenario.hint_layout()) for t in self.tenants],
             depth=depth, clip_rank=clip_rank, detector=detector)
 
+    def build_faults(self, profiles: Dict[str, dict], **global_kwargs):
+        """Per-tenant fault profiles -> one fleet-wide
+        :class:`~repro.faults.FaultModel`, keyed by tenant name.  Each
+        profile sets the per-block-resolvable knobs (``pebs_drop_p``,
+        ``hmu_counter_bits`` / ``hmu_counter_max``) on that tenant's block
+        segment; collector-global knobs (``reset_p``, ``nb_stall_p``,
+        ``stale_epochs``, ``seed``) go in ``global_kwargs`` — a reset drains
+        the shared collector, it cannot hit one tenant's blocks alone."""
+        from ..faults import FaultModel
+        unknown = set(profiles) - {t.name for t in self.tenants}
+        if unknown:
+            raise KeyError(f"unknown tenant names {sorted(unknown)}; "
+                           f"tenants are {[t.name for t in self.tenants]}")
+        segs = [profiles.get(t.name) for t in self.tenants]
+        return FaultModel.for_segments(self.offsets, segs, **global_kwargs)
+
 
 def run_fleet(
     fleet: FleetScenario,
@@ -227,6 +243,8 @@ def run_fleet(
     sync_every: int = 1,
     epochs=None,
     solo: bool = False,
+    faults=None,
+    hardening=None,
     **runtime_overrides,
 ) -> dict:
     """Place the whole fleet online and slice the result per tenant.
@@ -243,6 +261,14 @@ def run_fleet(
     ``(n_lanes, n_tenants)`` rows ride the same every-K transfer as the
     global records, bit-identical for every K.
 
+    ``faults=`` takes a fleet-wide :class:`~repro.faults.FaultModel` or a
+    ``{tenant_name: profile}`` dict handed to :meth:`FleetScenario.
+    build_faults` (per-tenant degradation; collector-global knobs then ride
+    ``runtime_overrides``-style through ``build_faults`` yourself).
+    ``hardening=`` passes through to the runtime unchanged.  Solo baselines
+    always run fault-free — the comparison is *this tenant under the fleet's
+    faults* vs *this tenant alone on healthy telemetry*.
+
     ``solo=True`` additionally runs every tenant's scenario alone (fresh
     pipelines, same policies) for interference-vs-isolation comparisons,
     each under a nested :func:`~repro.core.runtime.counting` scope whose
@@ -253,10 +279,13 @@ def run_fleet(
     """
     if hints is True:
         hints = fleet.build_pipeline(depth=lookahead_depth)
+    if isinstance(faults, dict):
+        faults = fleet.build_faults(faults)
     rt = EpochRuntime.for_scenario(
         fleet, policies=tuple(policies), hints=hints or None,
         prefetch_overlap=prefetch_overlap, fused=fused, mesh=mesh,
-        sync_every=sync_every, **runtime_overrides)
+        sync_every=sync_every, faults=faults, hardening=hardening,
+        **runtime_overrides)
     traj = rt.run(fleet.epochs() if epochs is None else epochs)
     out = {
         "trajectory": json.loads(traj.to_json(

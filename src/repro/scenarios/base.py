@@ -128,6 +128,8 @@ def run_scenario(
     mesh=None,
     sync_every: int = 1,
     epochs: Optional[Iterable[np.ndarray]] = None,
+    faults=None,
+    hardening=None,
     **runtime_overrides,
 ) -> dict:
     """Place one scenario online: all ``policies`` lanes over the scenario's
@@ -152,6 +154,12 @@ def run_scenario(
     Trajectories are bit-identical for every K (the partial tail is flushed
     on loop exit); K > 1 requires ``fused=True``.
 
+    ``faults=`` injects a :class:`repro.faults.FaultModel` into the fused
+    observe path (saturation / drops / resets / stalls / staleness);
+    ``hardening=`` enables the degradation-aware machinery (quality-gated
+    fallback, demotion hysteresis).  Both require ``fused=True``; a
+    default-constructed model reproduces the fault-free run bit for bit.
+
     Returns ``{"trajectory": per-epoch dict, "summary": headline numbers}``.
     """
     if hints is True:
@@ -159,7 +167,8 @@ def run_scenario(
     rt = EpochRuntime.for_scenario(
         scenario, policies=tuple(policies), hints=hints or None,
         prefetch_overlap=prefetch_overlap, fused=fused, mesh=mesh,
-        sync_every=sync_every, **runtime_overrides)
+        sync_every=sync_every, faults=faults, hardening=hardening,
+        **runtime_overrides)
     traj = rt.run(scenario.epochs() if epochs is None else epochs)
     return {
         "trajectory": json.loads(traj.to_json(scenario=scenario.name,

@@ -190,7 +190,7 @@ def test_epoch_step_donates_the_previous_state_buffers():
     rt.step(make_epochs(1, seed=1)[0])
     assert prev.bundle.true_counts.is_deleted()      # donated by observe_all
     assert prev.placement.slot_to_block.is_deleted()  # donated by _epoch_step
-    assert prev.out_buf["drained"].is_deleted()      # accumulator rides along
+    assert prev.out_buf["drained_lo"].is_deleted()      # accumulator rides along
 
 
 # --------------------------------------------- hints under the batched sync

@@ -124,3 +124,69 @@ def test_nb_scan_rate_equal_n_blocks_unmaps_everything_each_call():
     assert int(st.scan_ptr) == 0                # full cycle lands back at 0
     faults = np.asarray(st.faults)
     assert faults[3] == 1 and faults.sum() == 1
+
+
+def test_nb_scan_rate_above_n_blocks_wraps_cleanly():
+    """scan_rate > n_blocks: one tick covers the whole space (possibly more
+    than once) — every block unmapped, cursor at (rate % n), and a touch
+    still faults exactly once."""
+    n = 6
+    st = tel.nb_init(n, scan_rate=15)               # 2.5 passes per tick
+    st = tel.nb_observe(st, jnp.zeros((0,), jnp.int32))
+    assert not np.asarray(st.mapped).any()
+    assert int(st.scan_ptr) == 15 % n
+    st = tel.nb_observe(st, jnp.asarray([2, 2, 5], jnp.int32))
+    faults = np.asarray(st.faults)
+    assert faults[2] == 1 and faults[5] == 1 and faults.sum() == 2
+    assert float(st.host_events) == 2.0
+
+
+def test_nb_zero_batch_epoch_keeps_ptr_and_host_events_consistent():
+    """An epoch with no accesses still ticks the scanner (the kernel thread
+    does not care whether the workload ran): scan_ptr advances, pages
+    unmap, but host_events stays put — faults only fire on touches, and
+    host_events must equal the all-time fault total exactly."""
+    n, rate = 12, 5
+    st = tel.nb_init(n, scan_rate=rate)
+    empty = jnp.zeros((0,), jnp.int32)
+    for tick in range(1, 5):
+        st = tel.nb_observe(st, empty)
+        assert int(st.scan_ptr) == (tick * rate) % n
+        assert float(st.host_events) == 0.0
+    st = tel.nb_observe(st, jnp.asarray([0, 1, 2], jnp.int32))
+    assert float(st.host_events) == float(np.asarray(st.faults).sum())
+
+
+def test_hmu_drain_cost_zero_cost_still_resets_log():
+    st = tel.hmu_init(4, log_capacity=100)
+    st = tel.hmu_observe(st, jnp.zeros((30,), jnp.int32))
+    st = tel.hmu_drain_cost(st, per_record_cost=0.0)
+    assert float(st.log_used) == 0.0
+    assert float(st.host_events) == 0.0             # free drain charges nothing
+
+
+def test_hmu_drain_cost_rejects_inexact_scales():
+    """The exact hi/lo counter math only supports small integer scales; a
+    fractional or huge cost must fail loudly, not silently round."""
+    import pytest
+    st = tel.hmu_init(4, log_capacity=100)
+    with pytest.raises(ValueError, match="per_record_cost"):
+        tel.hmu_drain_cost(st, per_record_cost=1.5)
+    with pytest.raises(ValueError, match="per_record_cost"):
+        tel.hmu_drain_cost(st, per_record_cost=64.0)
+    with pytest.raises(ValueError, match="per_record_cost"):
+        tel.hmu_drain_cost(st, per_record_cost=-1.0)
+
+
+def test_hmu_event_scalars_exact_past_float32_range():
+    """Satellite regression: the old float32 scalars stopped incrementing at
+    2^24 (16.7M); the hi/lo int32 pair stays exact.  March log_used across
+    the 2^24 boundary in 4M-access chunks and check the recombined value."""
+    st = tel.hmu_init(8, log_capacity=1 << 33)
+    step = 4_000_000
+    for _ in range(5):                              # 20M > 2^24
+        st = tel.hmu_observe(st, jnp.zeros((step,), jnp.int32), weight=1)
+    assert float(st.log_used) == 5.0 * step         # exact, not 16_777_216
+    st = tel.hmu_drain_cost(st, per_record_cost=2.0)
+    assert float(st.host_events) == 10.0 * step     # exact scaled add
+    assert float(st.log_used) == 0.0
