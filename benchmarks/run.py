@@ -22,7 +22,13 @@ the paper reports for that artifact).
                      multi-tenant fleet mix with per-tenant
                      coverage/accuracy rows — all at full scale, or the
                      --scenario selection) each gated on the same
-                     2-dispatch count and fused-vs-reference bit-identity
+                     2-dispatch count and fused-vs-reference bit-identity.
+                     --export adds the telemetry export-plane bench into
+                     results/BENCH_export.json (epoch time on/off,
+                     records/s, dropped counts) gated on zero added
+                     dispatches, bit-identical records, schema validation,
+                     dead-sink circuit-breaker degradation, and a
+                     tracemalloc peak-memory budget
   telemetry_sweep  — §V coverage-vs-overhead: PEBS period / NB scan sweeps
   kernel_micro     — gather_count / embedding_bag / flash_attention
                      wall-time on CPU oracle path (correctness-scale) +
@@ -102,7 +108,8 @@ def table1_dlrm():
 
 # ============================================================= epoch runtime
 def epoch_runtime(json_mode: bool = False, scale: str = "full",
-                  scenarios=None, faults: bool = False):
+                  scenarios=None, faults: bool = False,
+                  export: bool = False):
     """Online multi-epoch tiering: fused observe_all + per-epoch migration.
     Emits the full per-epoch trajectory as JSON (the time-series artifact).
 
@@ -144,6 +151,8 @@ def epoch_runtime(json_mode: bool = False, scale: str = "full",
         _bench_epoch_runtime(dest, scale, scenarios or [])
         if faults:
             _bench_faults(dest, scale)
+        if export:
+            _bench_export(dest, scale)
 
 
 ALL_SCENARIOS = ("dlrm", "kv_cache", "moe_experts", "mmap_bench", "fleet")
@@ -576,6 +585,186 @@ def _bench_faults(dest: Path, scale: str):
         raise SystemExit(1)
 
 
+def _bench_export(dest: Path, scale: str):
+    """Export-plane overhead bench -> BENCH_export.json.
+
+    The export plane's promise is that observability costs the observed
+    system nothing, so every gate here is structural, not wall-clock:
+
+      1. zero added dispatches — export-on dispatch counts equal export-off
+         exactly (epoch stays 2 dispatches, record syncs unchanged);
+      2. bit-identical records and final placements export-on vs export-off;
+      3. everything emitted validates against the frozen schema and nothing
+         is dropped on the healthy sink (queue sized for the run);
+      4. a forced sink failure (every write raises) trips the circuit
+         breaker to noop — the run still completes bit-identical, nothing
+         raises into the epoch loop;
+      5. the export path's peak host allocation stays inside a tracemalloc
+         budget (bounded queue => O(queue) memory, not O(records)).
+
+    Wall-time rows (epoch time on/off, records/s through the sink, dropped
+    counts) are informational.
+    """
+    import json
+    import tracemalloc
+    from repro.core import runtime as rtmod
+    from repro.core.runtime import EpochRuntime
+    from repro.export import (CircuitBreaker, ExportClient, MemorySink,
+                              validate_record)
+
+    smoke = scale == "smoke"
+    n = 2_000 if smoke else 20_000
+    k = n // 10
+    n_epochs = 6 if smoke else 10
+    shape = (2, 8_000) if smoke else (4, 20_000)
+    sync_every = 3
+    policies = ("hmu_oracle", "hinted", "nb_two_touch")
+
+    rng = np.random.default_rng(23)
+    eps = [(rng.zipf(1.3, size=shape) % n).astype(np.int32)
+           for _ in range(n_epochs)]
+
+    def run(export=None):
+        rt = EpochRuntime(n, k, policies=policies,
+                          pebs_period=max(shape[0] * shape[1] // (4 * k), 1),
+                          nb_scan_rate=n // 4, fused=True,
+                          sync_every=sync_every, export=export)
+        with rtmod.counting() as c:
+            t0 = time.perf_counter()
+            rt.run(iter(eps))
+            wall = _elapsed(t0, rt.block_until_ready())
+            disp = dict(c.dispatch)
+        return rt, wall, disp
+
+    report = {"scale": scale, "n_blocks": n, "k_hot": k,
+              "n_epochs": n_epochs, "sync_every": sync_every,
+              "gates": {}}
+    ok = True
+
+    run()                     # warmup: jit compile outside the timed rows
+    base_rt, wall_off, disp_off = run()
+
+    sink = MemorySink()
+    client = ExportClient(sink, queue_size=8192, flush_interval_s=0.005)
+    t_on0 = time.perf_counter()
+    on_rt, wall_on, disp_on = run(export=client)
+    client.flush(timeout=60)
+    drain_wall = time.perf_counter() - t_on0
+    st = client.stats()
+    client.close()
+
+    # gate 1: zero added dispatches
+    report["gates"]["zero_added_dispatches"] = disp_on == disp_off
+    ok &= disp_on == disp_off
+
+    # gate 2: bit-identical records + placements
+    identical = all(
+        [a.to_dict() for a in base_rt.records[lane]]
+        == [b.to_dict() for b in on_rt.records[lane]]
+        and np.array_equal(base_rt.lanes[lane].slot_to_block,
+                           on_rt.lanes[lane].slot_to_block)
+        for lane in policies)
+    report["gates"]["bit_identical_records"] = identical
+    ok &= identical
+
+    # gate 3: everything validates, nothing dropped on a healthy sink
+    recs = sink.snapshot()
+    valid = True
+    for rec in recs:
+        try:
+            validate_record(rec)
+        except Exception:
+            valid = False
+            break
+    expected = n_epochs * len(policies)
+    complete = (st["exported"] == len(recs) == expected
+                and st["dropped_queue_full"] == 0
+                and st["dropped_invalid"] == 0
+                and st["sink_failures"] == 0)
+    report["gates"]["all_records_validate"] = valid
+    report["gates"]["no_drops_on_healthy_sink"] = complete
+    ok &= valid and complete
+
+    # gate 4: forced sink failure -> breaker -> noop; run unharmed
+    dead = ExportClient(
+        MemorySink(fail_always=True), batch_size=1, flush_interval_s=0.005,
+        breaker=CircuitBreaker(failure_threshold=1, cooldown_s=0.0),
+        degrade_after_trips=2)
+    dead_rt, wall_dead, disp_dead = run(export=dead)
+    dead.flush(timeout=60)
+    dst = dead.stats()
+    dead.close()
+    dead_ok = (dst["breaker_trips"] >= 1 and dst["exported"] == 0
+               and disp_dead == disp_off
+               and all([a.to_dict() for a in base_rt.records[lane]]
+                       == [b.to_dict() for b in dead_rt.records[lane]]
+                       for lane in policies))
+    report["gates"]["dead_sink_breaker_noop"] = dead_ok
+    ok &= dead_ok
+
+    # gate 5: tracemalloc budget on the export path alone
+    class DiscardSink:
+        def write(self, records):
+            pass
+
+    sample = dict(recs[0])
+    mem_client = ExportClient(DiscardSink(), queue_size=1024,
+                              flush_interval_s=0.002)
+    n_mem = 20_000
+    tracemalloc.start()
+    try:
+        for i in range(n_mem):
+            r = dict(sample)
+            r["epoch"] = i
+            mem_client.emit(r)
+        mem_client.flush(timeout=60)
+        _, mem_peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    mem_client.close()
+    budget = 8 * 1024 * 1024
+    report["gates"]["tracemalloc_budget_bytes"] = budget
+    report["tracemalloc_peak_bytes"] = mem_peak
+    ok &= mem_peak < budget
+
+    records_per_s = st["exported"] / drain_wall if drain_wall > 0 else 0.0
+    report.update({
+        "export_off": {"wall_s": wall_off, "dispatches": disp_off},
+        "export_on": {"wall_s": wall_on, "dispatches": disp_on,
+                      "records_exported": st["exported"],
+                      "records_per_s": records_per_s,
+                      "dropped_queue_full": st["dropped_queue_full"],
+                      "dropped_invalid": st["dropped_invalid"]},
+        "forced_failure": {"wall_s": wall_dead,
+                           "breaker_trips": dst["breaker_trips"],
+                           "degraded": dst["degraded"],
+                           "dropped_total": dst["dropped_sink_failure"]
+                           + dst["dropped_breaker_open"]
+                           + dst["dropped_degraded"]},
+    })
+    _row("export_off", wall_off / n_epochs * 1e6,
+         f"epoch={wall_off / n_epochs * 1e6:.0f}us no export")
+    _row("export_on", wall_on / n_epochs * 1e6,
+         f"epoch={wall_on / n_epochs * 1e6:.0f}us "
+         f"{records_per_s:.3g}rec/s dropped={st['dropped_queue_full']}")
+    _row("export_forced_failure", wall_dead / n_epochs * 1e6,
+         f"breaker_trips={dst['breaker_trips']} degraded={dst['degraded']} "
+         f"exported=0 run_bit_identical={dead_ok}")
+    _row("export_tracemalloc", 0.0,
+         f"peak={mem_peak}B budget={budget}B ({n_mem} records)")
+
+    out_path = dest / ("BENCH_export.json" if scale == "full"
+                       else "bench_export.smoke.json")
+    out_path.write_text(json.dumps(report, indent=1))
+    _row("export_bench_artifact", 0.0, str(out_path))
+    if not ok:
+        print("FAIL: export-plane gate broke — added dispatches, "
+              "bit-identity, schema validation, silent drops, dead-sink "
+              f"degradation, or memory budget (gates={report['gates']})",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
 # =========================================================== telemetry sweep
 def telemetry_sweep():
     """§V: PEBS coverage vs sampling overhead; HMU log capacity vs drops."""
@@ -699,6 +888,13 @@ def main() -> None:
                          "bit-identity + 2-dispatch epochs + "
                          "hardened-beats-naive, write results/"
                          "BENCH_faults.json")
+    ap.add_argument("--export", action="store_true",
+                    help="epoch_runtime --json: bench the telemetry export "
+                         "plane (epoch time on/off, records/s, drop "
+                         "counts), gate zero added dispatches + "
+                         "bit-identical records + schema validation + "
+                         "dead-sink degradation + tracemalloc budget, "
+                         "write results/BENCH_export.json")
     args = ap.parse_args()
     if args.scenarios and not args.json:
         ap.error("--scenario gates run inside the --json bench; "
@@ -706,13 +902,17 @@ def main() -> None:
     if args.faults and not args.json:
         ap.error("--faults gates run inside the --json bench; "
                  "add --json (or drop --faults)")
+    if args.export and not args.json:
+        ap.error("--export gates run inside the --json bench; "
+                 "add --json (or drop --export)")
     print("name,us_per_call,derived")
     for name, fn in ALL.items():
         if args.only and name != args.only:
             continue
         if name == "epoch_runtime":
             fn(json_mode=args.json, scale=args.scale,
-               scenarios=args.scenarios, faults=args.faults)
+               scenarios=args.scenarios, faults=args.faults,
+               export=args.export)
         else:
             fn()
 

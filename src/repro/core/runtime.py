@@ -815,6 +815,7 @@ class EpochRuntime:
         sync_every: int = 1,
         faults: Optional[FaultModel] = None,
         hardening: Optional[Hardening] = None,
+        export=None,
     ):
         unknown = set(policies) - set(ALL_POLICIES)
         if unknown:
@@ -874,6 +875,12 @@ class EpochRuntime:
             self._tenant_id_host = np.zeros((self.n_blocks,), np.int32)
         self.faults = faults
         self.hardening = hardening
+        # Optional repro.export client (duck-typed: export_epoch_record).
+        # Records it sees are the ones _flush_records already assembled for
+        # self.records, at the record-sync boundary where they are already
+        # host-side — export adds no dispatch and must never raise or block
+        # here (the client guarantees both).
+        self.export = export
         scan = nb_scan_rate if nb_scan_rate is not None else max(n_blocks // 16, 1)
         bundle = tel.bundle_init(
             n_blocks, pebs_period=pebs_period, nb_scan_rate=scan,
@@ -1337,6 +1344,8 @@ class EpochRuntime:
                 )
                 self.records[name].append(rec)
                 flushed[name].append(rec)
+                if self.export is not None:
+                    self.export.export_epoch_record(rec)
         self._buffered = 0
         return flushed
 
@@ -1431,6 +1440,8 @@ class EpochRuntime:
             )
             self.records[lane.name].append(rec)
             out[lane.name] = rec
+            if self.export is not None:
+                self.export.export_epoch_record(rec)
         if ten is not None:
             self.tenant_records.append(
                 {key: np.stack(rows) for key, rows in t_rows.items()})
@@ -1457,15 +1468,19 @@ class EpochRuntime:
         depth = self.hints.lookahead_depth if self.hints is not None else 0
         it = iter(epochs)
         buf: deque = deque()                # current epoch + queued lookahead
-        while True:
-            if not buf:
-                buf.extend(itertools.islice(it, 1))
+        try:
+            while True:
                 if not buf:
-                    break
-            batches = buf.popleft()
-            buf.extend(itertools.islice(it, depth - len(buf)))
-            self.step(batches, lookahead=tuple(buf))
-        self._flush_records()               # sync_every=K partial tail
+                    buf.extend(itertools.islice(it, 1))
+                    if not buf:
+                        break
+                batches = buf.popleft()
+                buf.extend(itertools.islice(it, depth - len(buf)))
+                self.step(batches, lookahead=tuple(buf))
+        finally:
+            # sync_every=K partial tail — also on exception, so a run killed
+            # mid-stream still lands (and exports) every dispatched epoch
+            self._flush_records()
         return Trajectory(n_blocks=self.n_blocks, k_hot=self.k_hot,
                           records={name: recs[starts[name]:]
                                    for name, recs in self.records.items()})

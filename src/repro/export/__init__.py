@@ -1,0 +1,39 @@
+"""repro.export — non-blocking telemetry export plane.
+
+Everything the runtime already measures (per-epoch lane records, per-tenant
+rows, collector quality, run summaries) leaves the process through this
+package, under two hard guarantees:
+
+1. **Frozen wire schema** (``schema.py`` + ``telemetry.schema.json``):
+   units encoded in field names, JSON-Schema checked in, every emitted
+   record validated.  Internal dataclasses may refactor; the wire form may
+   only grow optional fields with a version bump.
+2. **Zero cost to the observed system** (``client.py`` + ``sinks.py``):
+   the epoch loop's contribution is one non-blocking enqueue at the
+   existing ``sync_every=K`` record-sync boundary — no extra device
+   dispatch, bit-identical trajectories export-on vs export-off, and a
+   circuit breaker that degrades a failing sink to noop instead of ever
+   blocking or raising into ``run()``.
+
+Typical use::
+
+    from repro.export import ExportClient, JsonlSink
+    client = ExportClient(JsonlSink("results/telemetry.jsonl"))
+    out = run_scenario(scenario, export=client)
+    client.close()
+
+See ``docs/telemetry_schema.md`` for the frozen field/type/units table.
+"""
+from .client import CircuitBreaker, ExportClient, NoopClient
+from .schema import (SCHEMA_PATH, SCHEMA_VERSION, SchemaError, load_schema,
+                     validate_record, epoch_record_wire, tenant_record_wire,
+                     lane_summary_wire, tenant_lane_summary_wire)
+from .sinks import JsonlSink, MemorySink, PrometheusTextSink, SinkError
+
+__all__ = [
+    "CircuitBreaker", "ExportClient", "NoopClient",
+    "SCHEMA_PATH", "SCHEMA_VERSION", "SchemaError", "load_schema",
+    "validate_record", "epoch_record_wire", "tenant_record_wire",
+    "lane_summary_wire", "tenant_lane_summary_wire",
+    "JsonlSink", "MemorySink", "PrometheusTextSink", "SinkError",
+]

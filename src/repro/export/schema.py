@@ -1,0 +1,217 @@
+"""Frozen telemetry wire schema — the contract downstream tooling parses.
+
+The in-process record types (:class:`~repro.core.runtime.EpochRecord`,
+:class:`~repro.fleet.accounting.TenantRecord`, the ``run_scenario`` summary
+dicts) are free to evolve with the runtime; what crosses the process
+boundary is not.  This module freezes the **wire form**: field names with
+units encoded in them (``_s`` seconds, ``_us`` microseconds, ``_blocks``
+block counts, ``_count`` event counts; ratios unitless in [0, 1]),
+documented field-for-field in ``docs/telemetry_schema.md`` and encoded as
+JSON Schema in the checked-in ``telemetry.schema.json`` next to this file.
+
+* :func:`validate_record` checks one wire record against the schema and
+  raises :class:`SchemaError` with the offending path.  The validator is
+  self-contained (it interprets the subset of JSON Schema the document
+  uses — ``$ref`` into ``$defs``, ``const``/``enum``/``type``,
+  ``properties``/``required``/``additionalProperties``, ``minimum``/
+  ``maximum``, top-level ``oneOf`` dispatched on ``record_type``) so the
+  export plane validates everywhere the repo runs; when the ``jsonschema``
+  package is importable the test suite cross-checks both validators agree.
+* ``epoch_record_wire`` / ``tenant_record_wire`` / ``lane_summary_wire`` /
+  ``tenant_lane_summary_wire`` convert the in-process objects to wire
+  records.  Conversion is the ONLY place internal and wire names may
+  differ (``resident`` -> ``resident_blocks``), which is what lets the
+  schema stay frozen while the runtime refactors freely.
+
+Schema evolution is additive only: a new field must be optional, existing
+fields never change name, type, or units, and ``SCHEMA_VERSION`` bumps with
+any addition so consumers can gate on it.
+"""
+from __future__ import annotations
+
+import json
+from functools import lru_cache
+from pathlib import Path
+from typing import Dict, Optional
+
+from ..faults.model import collector_for_lane
+
+__all__ = [
+    "SCHEMA_PATH", "SCHEMA_VERSION", "SchemaError", "load_schema",
+    "validate_record", "epoch_record_wire", "tenant_record_wire",
+    "lane_summary_wire", "tenant_lane_summary_wire",
+]
+
+SCHEMA_VERSION = 1
+SCHEMA_PATH = Path(__file__).with_name("telemetry.schema.json")
+
+# run_scenario/tenant_summary cross-lane aggregate keys that live in the
+# summary dict next to the per-lane rows; never part of a wire record
+_SUMMARY_AGGREGATES = ("proactive_vs_nb_post_shift",
+                       "prefetch_vs_hinted_post_shift_coverage")
+
+
+class SchemaError(ValueError):
+    """A wire record does not conform to the frozen telemetry schema."""
+
+
+@lru_cache(maxsize=1)
+def load_schema() -> dict:
+    """The checked-in JSON-Schema document (parsed once per process)."""
+    return json.loads(SCHEMA_PATH.read_text())
+
+
+# ------------------------------------------------------------ the validator
+_TYPES = {
+    "object": dict, "string": str, "boolean": bool,
+    "array": list, "null": type(None),
+}
+
+
+def _deref(node: dict, schema: dict) -> dict:
+    ref = node.get("$ref")
+    if ref is None:
+        return node
+    if not ref.startswith("#/"):              # pragma: no cover - frozen doc
+        raise SchemaError(f"unsupported $ref {ref!r}")
+    out = schema
+    for part in ref[2:].split("/"):
+        out = out[part]
+    return out
+
+
+def _check(value, node: dict, schema: dict, path: str) -> None:
+    node = _deref(node, schema)
+    if "const" in node:
+        if value != node["const"]:
+            raise SchemaError(f"{path}: expected {node['const']!r}, "
+                              f"got {value!r}")
+        return
+    if "enum" in node:
+        if value not in node["enum"]:
+            raise SchemaError(f"{path}: {value!r} not one of {node['enum']}")
+        return
+    typ = node.get("type")
+    if typ == "integer":
+        # bool is an int subclass; the schema means a real integer
+        if isinstance(value, bool) or not isinstance(value, int):
+            raise SchemaError(f"{path}: expected integer, got {value!r}")
+    elif typ == "number":
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            raise SchemaError(f"{path}: expected number, got {value!r}")
+    elif typ is not None:
+        if not isinstance(value, _TYPES[typ]):
+            raise SchemaError(f"{path}: expected {typ}, got {value!r}")
+    if "minimum" in node and value < node["minimum"]:
+        raise SchemaError(f"{path}: {value!r} < minimum {node['minimum']}")
+    if "maximum" in node and value > node["maximum"]:
+        raise SchemaError(f"{path}: {value!r} > maximum {node['maximum']}")
+    if typ == "object":
+        props = node.get("properties", {})
+        for req in node.get("required", ()):
+            if req not in value:
+                raise SchemaError(f"{path}: missing required field {req!r}")
+        if node.get("additionalProperties") is False:
+            extra = set(value) - set(props)
+            if extra:
+                raise SchemaError(f"{path}: unknown fields "
+                                  f"{sorted(extra)} (the schema is frozen; "
+                                  f"additive changes need a version bump)")
+        for key, sub in props.items():
+            if key in value:
+                _check(value[key], sub, schema, f"{path}.{key}")
+
+
+def validate_record(record: dict) -> dict:
+    """Check one wire record against the frozen schema; returns the record
+    unchanged so emit paths can validate inline.  Raises
+    :class:`SchemaError` naming the offending field path."""
+    if not isinstance(record, dict):
+        raise SchemaError(f"record must be a dict, got {type(record).__name__}")
+    schema = load_schema()
+    rtype = record.get("record_type")
+    defs = schema["$defs"]
+    if rtype not in defs or "record_type" not in defs[rtype].get(
+            "properties", {}):
+        known = sorted(d for d in defs
+                       if "record_type" in defs[d].get("properties", {}))
+        raise SchemaError(f"record_type: {rtype!r} not one of {known}")
+    _check(record, defs[rtype], schema, f"${rtype}")
+    return record
+
+
+# ------------------------------------------------------- wire conversions
+def _with_scenario(rec: dict, scenario: Optional[str]) -> dict:
+    if scenario is not None:
+        rec["scenario"] = scenario
+    return rec
+
+
+def epoch_record_wire(rec, scenario: Optional[str] = None) -> dict:
+    """:class:`~repro.core.runtime.EpochRecord` -> frozen wire record.
+    ``rec`` is duck-typed (attribute access only) so this package never
+    imports ``repro.core``."""
+    return _with_scenario({
+        "record_type": "epoch",
+        "schema_version": SCHEMA_VERSION,
+        "epoch": int(rec.epoch),
+        "lane": rec.lane,
+        "collector": collector_for_lane(rec.lane),
+        "time_s": float(rec.time_s),
+        "access_s": float(rec.access_s),
+        "host_tax_s": float(rec.host_tax_s),
+        "migration_s": float(rec.migration_s),
+        "hidden_s": float(rec.hidden_s),
+        "accuracy": float(rec.accuracy),
+        "coverage": float(rec.coverage),
+        "quality": float(rec.quality),
+        "resident_blocks": int(rec.resident),
+        "promoted_blocks": int(rec.promoted),
+        "demoted_blocks": int(rec.demoted),
+        "host_events_count": float(rec.host_events),
+    }, scenario)
+
+
+def tenant_record_wire(rec, scenario: Optional[str] = None) -> dict:
+    """:class:`~repro.fleet.accounting.TenantRecord` -> wire record."""
+    return _with_scenario({
+        "record_type": "tenant",
+        "schema_version": SCHEMA_VERSION,
+        "epoch": int(rec.epoch),
+        "lane": rec.lane,
+        "tenant": rec.tenant,
+        "time_s": float(rec.time_s),
+        "access_s": float(rec.access_s),
+        "host_tax_s": float(rec.host_tax_s),
+        "migration_s": float(rec.migration_s),
+        "accuracy": float(rec.accuracy),
+        "coverage": float(rec.coverage),
+        "resident_blocks": int(rec.resident),
+        "promoted_blocks": int(rec.promoted),
+        "demoted_blocks": int(rec.demoted),
+        "n_fast_accesses_count": float(rec.n_fast),
+        "n_slow_accesses_count": float(rec.n_slow),
+        "hot_k_blocks": int(rec.hot_k),
+    }, scenario)
+
+
+def lane_summary_wire(lane: str, summary: Dict[str, object],
+                      scenario: Optional[str] = None) -> dict:
+    """One lane's ``run_scenario``/``run_online`` summary dict -> wire
+    record.  The summary dict is already schema-conformant field-for-field
+    (units in names), so this only stamps the envelope."""
+    rec = {"record_type": "lane_summary", "schema_version": SCHEMA_VERSION,
+           "lane": lane}
+    rec.update(summary)
+    return _with_scenario(rec, scenario)
+
+
+def tenant_lane_summary_wire(tenant: str, lane: str,
+                             summary: Dict[str, object],
+                             scenario: Optional[str] = None) -> dict:
+    """One tenant x lane row of ``fleet.accounting.tenant_summary`` ->
+    wire record."""
+    rec = {"record_type": "tenant_lane_summary",
+           "schema_version": SCHEMA_VERSION, "tenant": tenant, "lane": lane}
+    rec.update(summary)
+    return _with_scenario(rec, scenario)

@@ -280,6 +280,14 @@ LANE_COLLECTOR: Dict[str, Optional[str]] = {
 }
 
 
+def collector_for_lane(lane: str) -> Optional[str]:
+    """The collector feeding ``lane``'s decisions (``None`` for lanes that
+    consume no telemetry, e.g. ``prefetch``).  Exported telemetry records
+    carry this so downstream quality dashboards can join per-lane outcomes
+    against per-collector fault state."""
+    return LANE_COLLECTOR.get(lane)
+
+
 class Hardening(NamedTuple):
     """Degradation-aware runtime config (static; baked into the fused trace).
 

@@ -66,13 +66,16 @@ class TenantRecord:
         return dataclasses.asdict(self)
 
 
-def tenant_trajectories(rt: EpochRuntime, fleet,
+def tenant_trajectories(rt: EpochRuntime, fleet, export=None,
                         ) -> Dict[str, Dict[str, List[TenantRecord]]]:
     """``{tenant: {lane: [TenantRecord per epoch]}}`` from a fleet run.
 
     Flushes the runtime's batched record sync first, so a caller that
     manually ``step``-ped with ``sync_every > 1`` never reads a partial
-    ``tenant_records`` history."""
+    ``tenant_records`` history.  ``export=`` emits every row as a
+    ``tenant`` wire record tagged by tenant name (the rows rode the same
+    batched record sync as the global records — exporting them here adds
+    no device transfer)."""
     if rt.fused:
         rt.flush()                  # sync_every=K partial tail, if any
     if rt.tenancy is None or not rt.tenant_records:
@@ -99,7 +102,7 @@ def tenant_trajectories(rt: EpochRuntime, fleet,
                     promoted + demoted, spec.scenario.block_bytes)
                 share = (n_fast + n_slow) / total if total else 0.0
                 host_tax_s = g.host_tax_s * share
-                out[spec.name][lane].append(TenantRecord(
+                rec = TenantRecord(
                     epoch=e, lane=lane, tenant=spec.name,
                     time_s=access_s + host_tax_s + migration_s,
                     access_s=access_s, host_tax_s=host_tax_s,
@@ -108,16 +111,23 @@ def tenant_trajectories(rt: EpochRuntime, fleet,
                     coverage=inter / hot_k[t_idx],
                     resident=resident, promoted=promoted, demoted=demoted,
                     n_fast=n_fast, n_slow=n_slow, hot_k=hot_k[t_idx],
-                ))
+                )
+                out[spec.name][lane].append(rec)
+                if export is not None:
+                    export.export_tenant_record(rec)
     return out
 
 
 def tenant_summary(rt: EpochRuntime, fleet,
-                   policies: Sequence[str]) -> dict:
+                   policies: Sequence[str], export=None) -> dict:
     """Headline per-tenant numbers: quota, hot-set size, and per-lane
     mean/final coverage + accuracy, mean epoch time, move totals — plus the
-    full per-epoch rows (the machine-readable trajectory)."""
-    trajs = tenant_trajectories(rt, fleet)
+    full per-epoch rows (the machine-readable trajectory).
+
+    The per-lane dicts are wire-conformant ``tenant_lane_summary`` records
+    minus the envelope (units in field names, validated against
+    ``repro.export.telemetry.schema.json`` in tests)."""
+    trajs = tenant_trajectories(rt, fleet, export=export)
     caps = rt.tenancy.caps
     summary: Dict[str, dict] = {}
     for t_idx, spec in enumerate(fleet.tenants):
@@ -133,9 +143,12 @@ def tenant_summary(rt: EpochRuntime, fleet,
                 "final_accuracy": float(accs[-1]),
                 "mean_time_us": float(np.mean(
                     [r.time_s for r in recs]) * 1e6),
-                "promoted_total": int(sum(r.promoted for r in recs)),
-                "demoted_total": int(sum(r.demoted for r in recs)),
+                "promoted_total_blocks": int(sum(r.promoted for r in recs)),
+                "demoted_total_blocks": int(sum(r.demoted for r in recs)),
             }
+            if export is not None:
+                export.export_tenant_lane_summary(spec.name, lane,
+                                                  lanes[lane])
         summary[spec.name] = {
             "n_blocks": spec.n_blocks,
             "hot_k": rt.tenancy.hot_k[t_idx],

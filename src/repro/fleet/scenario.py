@@ -245,6 +245,7 @@ def run_fleet(
     solo: bool = False,
     faults=None,
     hardening=None,
+    export=None,
     **runtime_overrides,
 ) -> dict:
     """Place the whole fleet online and slice the result per tenant.
@@ -269,6 +270,13 @@ def run_fleet(
     always run fault-free — the comparison is *this tenant under the fleet's
     faults* vs *this tenant alone on healthy telemetry*.
 
+    ``export=`` attaches a :class:`repro.export.ExportClient`: global
+    per-epoch records stream out at the record-sync boundary, per-tenant
+    rows are emitted as ``tenant`` wire records tagged by tenant name, and
+    the global ``lane_summary`` / per-tenant ``tenant_lane_summary``
+    headline rows land on completion.  Solo baseline runs are NOT exported
+    (they are comparison scaffolding, not fleet telemetry).
+
     ``solo=True`` additionally runs every tenant's scenario alone (fresh
     pipelines, same policies) for interference-vs-isolation comparisons,
     each under a nested :func:`~repro.core.runtime.counting` scope whose
@@ -281,18 +289,24 @@ def run_fleet(
         hints = fleet.build_pipeline(depth=lookahead_depth)
     if isinstance(faults, dict):
         faults = fleet.build_faults(faults)
+    exp = export.bind(scenario=fleet.name) if export is not None else None
     rt = EpochRuntime.for_scenario(
         fleet, policies=tuple(policies), hints=hints or None,
         prefetch_overlap=prefetch_overlap, fused=fused, mesh=mesh,
         sync_every=sync_every, faults=faults, hardening=hardening,
-        **runtime_overrides)
+        export=exp, **runtime_overrides)
     traj = rt.run(fleet.epochs() if epochs is None else epochs)
+    summary = scenario_summary(rt, traj, policies, fleet.shift_at)
+    if exp is not None:
+        for name in policies:
+            exp.export_lane_summary(name, summary[name])
     out = {
         "trajectory": json.loads(traj.to_json(
             scenario=fleet.name, shift_at=fleet.shift_at,
             capacity=fleet.capacity)),
-        "summary": scenario_summary(rt, traj, policies, fleet.shift_at),
-        "tenants": accounting.tenant_summary(rt, fleet, policies),
+        "summary": summary,
+        "tenants": accounting.tenant_summary(rt, fleet, policies,
+                                             export=exp),
     }
     if solo:
         solos: Dict[str, dict] = {}

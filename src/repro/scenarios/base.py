@@ -84,7 +84,13 @@ def build_hints(scenario: AccessScenario, depth: int = 1,
 def scenario_summary(rt: EpochRuntime, traj: Trajectory,
                      policies: Sequence[str], shift_at: int) -> dict:
     """Headline per-lane numbers from a trajectory (the same columns for
-    every workload, so scenarios are comparable row-for-row)."""
+    every workload, so scenarios are comparable row-for-row).
+
+    Per-lane dicts are wire-conformant ``lane_summary`` records minus the
+    envelope (units in field names, validated against
+    ``repro.export.telemetry.schema.json`` in tests); the cross-lane
+    aggregates (``proactive_vs_nb_post_shift``, ...) sit beside them at the
+    top level and are not export records."""
     summary: Dict[str, object] = {}
     for name in policies:
         ts = traj.times(name)
@@ -100,7 +106,7 @@ def scenario_summary(rt: EpochRuntime, traj: Trajectory,
             "post_shift_mean_coverage": float(covs[post].mean()),
             "post_shift_recovery_epochs": int(np.argmax(
                 accs[post] >= 0.5)) if (accs[post] >= 0.5).any() else -1,
-            "hidden_s_total": float(sum(r.hidden_s for r in recs)),
+            "hidden_total_s": float(sum(r.hidden_s for r in recs)),
         }
         if name == "prefetch":
             # the final boundary's migration overlaps an epoch that never
@@ -130,6 +136,7 @@ def run_scenario(
     epochs: Optional[Iterable[np.ndarray]] = None,
     faults=None,
     hardening=None,
+    export=None,
     **runtime_overrides,
 ) -> dict:
     """Place one scenario online: all ``policies`` lanes over the scenario's
@@ -160,18 +167,30 @@ def run_scenario(
     fallback, demotion hysteresis).  Both require ``fused=True``; a
     default-constructed model reproduces the fault-free run bit for bit.
 
+    ``export=`` attaches a :class:`repro.export.ExportClient`: per-epoch
+    records stream out at the runtime's record-sync boundary and each
+    lane's summary is emitted as a ``lane_summary`` record on completion,
+    all tagged with the scenario's name.  Export is observability-only —
+    trajectories are bit-identical export-on vs export-off and the epoch
+    dispatch count is unchanged.
+
     Returns ``{"trajectory": per-epoch dict, "summary": headline numbers}``.
     """
     if hints is True:
         hints = build_hints(scenario, depth=lookahead_depth)
+    exp = export.bind(scenario=scenario.name) if export is not None else None
     rt = EpochRuntime.for_scenario(
         scenario, policies=tuple(policies), hints=hints or None,
         prefetch_overlap=prefetch_overlap, fused=fused, mesh=mesh,
         sync_every=sync_every, faults=faults, hardening=hardening,
-        **runtime_overrides)
+        export=exp, **runtime_overrides)
     traj = rt.run(scenario.epochs() if epochs is None else epochs)
+    summary = scenario_summary(rt, traj, policies, scenario.shift_at)
+    if exp is not None:
+        for name in policies:
+            exp.export_lane_summary(name, summary[name])
     return {
         "trajectory": json.loads(traj.to_json(scenario=scenario.name,
                                               shift_at=scenario.shift_at)),
-        "summary": scenario_summary(rt, traj, policies, scenario.shift_at),
+        "summary": summary,
     }

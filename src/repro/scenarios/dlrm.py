@@ -92,6 +92,7 @@ def run_online(
     fused: bool = True,
     mesh=None,
     sync_every: int = 1,
+    export=None,
 ) -> dict:
     """§VI online regime: multi-epoch phase-shifting DLRM trace through the
     EpochRuntime.  The hot set rotates at ``shift_at``; the trajectory shows
@@ -109,7 +110,9 @@ def run_online(
     or the per-lane reference path; ``mesh`` (see
     ``launch.mesh.make_telemetry_mesh``) shards all per-page state across
     devices for paper-scale (5.24 M page) trajectories; ``sync_every=K``
-    batches the fused loop's record syncs (bit-identical for every K).
+    batches the fused loop's record syncs (bit-identical for every K);
+    ``export=`` streams records through a :class:`repro.export.ExportClient`
+    (observability-only: trajectories are bit-identical either way).
 
     Returns ``{"trajectory": per-epoch dict, "summary": headline numbers}``.
     """
@@ -120,4 +123,4 @@ def run_online(
     return run_scenario(
         scenario, policies=policies, hints=hints,
         lookahead_depth=lookahead_depth, prefetch_overlap=prefetch_overlap,
-        fused=fused, mesh=mesh, sync_every=sync_every)
+        fused=fused, mesh=mesh, sync_every=sync_every, export=export)

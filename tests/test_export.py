@@ -1,0 +1,631 @@
+"""repro.export — frozen schema, non-blocking client, zero-overhead gates.
+
+Three layers under test, matching the export plane's two hard guarantees:
+
+* **Schema** — every wire record the plane emits validates against the
+  checked-in ``telemetry.schema.json``; the frozen-ness is enforced (extra
+  fields, missing fields, wrong types/units all rejected); the native
+  subset validator agrees with the reference ``jsonschema`` package when
+  that is installed; and the ``run_scenario``/``tenant_summary`` summary
+  dicts are wire-conformant field-for-field.
+* **Client** — bounded queue never blocks (queue-full drops are counted),
+  invalid records are dropped not raised, the circuit breaker walks its
+  trip/half-open/recover cycle, a permanently dead sink degrades the
+  client to noop, atexit drains the queue on interpreter exit.
+* **Non-interference** — export-on runs are bit-identical to export-off
+  (trajectories, tenant rows, summaries), ``DISPATCH_COUNTS`` unchanged
+  (epoch stays 2 dispatches, record syncs unchanged), a dead sink never
+  stalls or raises into ``run()``, and the export path's peak host memory
+  stays inside a ``tracemalloc`` budget.  Plus the PR's tail-flush bugfix:
+  a run killed mid-stream still lands (and exports) every dispatched
+  epoch.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+import tracemalloc
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import runtime as rtmod
+from repro.core.runtime import ALL_POLICIES, EpochRuntime
+from repro.export import (CircuitBreaker, ExportClient, JsonlSink,
+                          MemorySink, NoopClient, PrometheusTextSink,
+                          SchemaError, epoch_record_wire, lane_summary_wire,
+                          load_schema, tenant_lane_summary_wire,
+                          tenant_record_wire, validate_record)
+from repro.faults.model import LANE_COLLECTOR, collector_for_lane
+from repro.fleet import FleetScenario, TenantSpec, run_fleet
+from repro.scenarios import KVCacheScenario, run_scenario
+
+REPO = Path(__file__).resolve().parent.parent
+SUBPROC_ENV = dict(os.environ, PYTHONPATH=str(REPO / "src"),
+                   JAX_PLATFORMS="cpu")
+
+
+def make_scenario(n_epochs=4, **kw):
+    kw.setdefault("batch", 2)
+    kw.setdefault("batches_per_epoch", 2)
+    kw.setdefault("accesses_per_batch", 1_024)
+    return KVCacheScenario(n_epochs=n_epochs, **kw)
+
+
+def make_fleet(n_epochs=4):
+    return FleetScenario([
+        TenantSpec(make_scenario(n_epochs=n_epochs), name="kv_a"),
+        TenantSpec(make_scenario(n_epochs=n_epochs, seed=7), name="kv_b"),
+    ], capacity="weighted")
+
+
+def make_runtime(sync_every=1, **kw):
+    kw.setdefault("policies", ALL_POLICIES)
+    kw.setdefault("pebs_period", 101)
+    kw.setdefault("nb_scan_rate", 90)
+    return EpochRuntime(400, 40, sync_every=sync_every, **kw)
+
+
+def make_epochs(n_epochs, n_blocks=400, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, n_blocks, (3, 2000)).astype(np.int32)
+            for _ in range(n_epochs)]
+
+
+def sample_epoch_record():
+    """A wire-valid epoch record via the real converter (duck-typed rec)."""
+    class Rec:
+        epoch = 3; lane = "hinted"; time_s = 1.5; access_s = 1.0
+        host_tax_s = 0.25; migration_s = 0.25; hidden_s = 0.0
+        accuracy = 0.9; coverage = 0.8; quality = 1.0
+        resident = 64; promoted = 2; demoted = 1; host_events = 100.0
+    return epoch_record_wire(Rec(), scenario="unit")
+
+
+class SlowSink:
+    """Sink that blocks in write() until released — forces queue pressure."""
+
+    def __init__(self):
+        self.release = threading.Event()
+        self.records = []
+
+    def write(self, records):
+        self.release.wait(timeout=30)
+        self.records.extend(records)
+
+
+# =====================================================================
+# schema + validator
+# =====================================================================
+class TestSchema:
+    def test_schema_document_loads_and_is_frozen_shape(self):
+        doc = load_schema()
+        assert set(doc["$defs"]) >= {"epoch", "tenant", "lane_summary",
+                                     "tenant_lane_summary"}
+        for name in ("epoch", "tenant", "lane_summary",
+                     "tenant_lane_summary"):
+            node = doc["$defs"][name]
+            assert node["additionalProperties"] is False
+            assert node["properties"]["schema_version"]["const"] == 1
+
+    def test_valid_epoch_record_passes(self):
+        rec = sample_epoch_record()
+        assert validate_record(rec) is rec
+
+    def test_units_in_field_names(self):
+        rec = sample_epoch_record()
+        assert "time_s" in rec and "resident_blocks" in rec
+        assert "host_events_count" in rec
+        assert not any(k in rec for k in ("time", "resident", "host_events"))
+
+    @pytest.mark.parametrize("mutate,", [
+        lambda r: r.pop("coverage"),                       # missing required
+        lambda r: r.__setitem__("surprise_field", 1),      # frozen: no extras
+        lambda r: r.__setitem__("coverage", 1.5),          # ratio cap
+        lambda r: r.__setitem__("coverage", -0.1),         # ratio floor
+        lambda r: r.__setitem__("resident_blocks", 1.5),   # integer
+        lambda r: r.__setitem__("resident_blocks", True),  # bool is not int
+        lambda r: r.__setitem__("lane", "surprise_lane"),  # lane enum
+        lambda r: r.__setitem__("collector", "ebpf"),      # collector enum
+        lambda r: r.__setitem__("schema_version", 2),      # version const
+        lambda r: r.__setitem__("epoch", -1),              # epoch floor
+        lambda r: r.__setitem__("time_s", "fast"),         # number type
+    ])
+    def test_invalid_epoch_records_rejected(self, mutate):
+        rec = sample_epoch_record()
+        mutate(rec)
+        with pytest.raises(SchemaError):
+            validate_record(rec)
+
+    def test_unknown_record_type_rejected(self):
+        with pytest.raises(SchemaError, match="record_type"):
+            validate_record({"record_type": "mystery"})
+        with pytest.raises(SchemaError):
+            validate_record({"schema_version": 1})
+        # $defs that aren't record shapes (ratio, lane_name) don't dispatch
+        with pytest.raises(SchemaError, match="record_type"):
+            validate_record({"record_type": "ratio"})
+
+    def test_non_dict_rejected(self):
+        with pytest.raises(SchemaError):
+            validate_record([sample_epoch_record()])
+
+    def test_collector_field_tracks_lane(self):
+        for lane, col in LANE_COLLECTOR.items():
+            rec = sample_epoch_record()
+            rec["lane"] = lane
+            rec["collector"] = collector_for_lane(lane)
+            assert rec["collector"] == col
+            validate_record(rec)
+            if col is not None:       # mismatched pair still type-checks,
+                rec["collector"] = "bogus"        # bogus collector does not
+                with pytest.raises(SchemaError):
+                    validate_record(rec)
+
+    def test_scenario_label_optional(self):
+        rec = sample_epoch_record()
+        del rec["scenario"]
+        validate_record(rec)
+
+    def test_native_validator_agrees_with_jsonschema(self):
+        jsonschema = pytest.importorskip("jsonschema")
+        doc = load_schema()
+        good = sample_epoch_record()
+        jsonschema.validate(good, doc)        # reference accepts
+        validate_record(good)                 # ours accepts
+        for mutate in (lambda r: r.pop("coverage"),
+                       lambda r: r.__setitem__("extra", 1),
+                       lambda r: r.__setitem__("coverage", 2.0)):
+            bad = sample_epoch_record()
+            mutate(bad)
+            with pytest.raises(jsonschema.ValidationError):
+                jsonschema.validate(bad, doc)
+            with pytest.raises(SchemaError):
+                validate_record(bad)
+
+
+class TestSummaryConformance:
+    """Satellite: the in-repo summary dicts ARE wire records minus the
+    envelope — units in field names, schema-validated here."""
+
+    def test_run_scenario_summary_is_schema_conformant(self):
+        out = run_scenario(make_scenario(), hints=True)
+        for lane in ALL_POLICIES:
+            validate_record(lane_summary_wire(lane, out["summary"][lane],
+                                              scenario="kv_cache"))
+        assert "hidden_total_s" in out["summary"]["prefetch"]
+        assert "pending_migration_us" in out["summary"]["prefetch"]
+
+    def test_tenant_summary_is_schema_conformant(self):
+        out = run_fleet(make_fleet(), hints=False)
+        for tenant, block in out["tenants"].items():
+            for lane, row in block["lanes"].items():
+                validate_record(tenant_lane_summary_wire(tenant, lane, row))
+                assert "promoted_total_blocks" in row
+                assert "demoted_total_blocks" in row
+
+
+# =====================================================================
+# circuit breaker
+# =====================================================================
+class TestCircuitBreaker:
+    def test_trip_half_open_recover_cycle(self):
+        t = [0.0]
+        b = CircuitBreaker(failure_threshold=2, cooldown_s=1.0,
+                           clock=lambda: t[0])
+        assert b.state == "closed" and b.allow()
+        b.record_failure()
+        assert b.state == "closed"            # below threshold
+        b.record_failure()
+        assert b.state == "open" and not b.allow() and b.trips == 1
+        t[0] = 0.5
+        assert not b.allow()                  # still cooling down
+        t[0] = 1.0
+        assert b.state == "half_open" and b.allow()
+        b.record_failure()                    # probe fails -> re-open
+        assert b.state == "open" and b.trips == 2
+        t[0] = 2.5
+        assert b.allow()                      # next probe
+        b.record_success()
+        assert b.state == "closed" and b.consecutive_trips == 0
+        b.record_failure()                    # threshold counter was reset
+        assert b.state == "closed"
+
+    def test_success_resets_failure_streak(self):
+        b = CircuitBreaker(failure_threshold=3)
+        b.record_failure(); b.record_failure(); b.record_success()
+        b.record_failure(); b.record_failure()
+        assert b.state == "closed"
+
+
+# =====================================================================
+# client edge cases
+# =====================================================================
+class TestExportClient:
+    def test_happy_path_batched_delivery(self):
+        sink = MemorySink()
+        client = ExportClient(sink, flush_interval_s=0.005)
+        n = 100
+        for _ in range(n):
+            assert client.emit(sample_epoch_record())
+        client.flush(timeout=10)
+        st = client.stats()
+        assert st["emitted"] == n and st["exported"] == n
+        assert len(sink.snapshot()) == n
+        assert sink.write_calls <= n          # batching actually batches
+        client.close()
+
+    def test_queue_full_drops_and_never_blocks(self):
+        sink = SlowSink()
+        client = ExportClient(sink, queue_size=8, flush_interval_s=0.005)
+        t0 = time.monotonic()
+        for _ in range(200):
+            client.emit(sample_epoch_record())
+        emit_elapsed = time.monotonic() - t0
+        st = client.stats()
+        assert st["dropped_queue_full"] > 0
+        assert st["dropped_queue_full"] + st["emitted"] == 200
+        # 200 emits against a wedged sink must not wait on it
+        assert emit_elapsed < 5.0
+        sink.release.set()
+        client.flush(timeout=10)
+        assert client.stats()["exported"] == client.stats()["emitted"]
+        client.close()
+
+    def test_invalid_record_dropped_counted_not_raised(self):
+        sink = MemorySink()
+        client = ExportClient(sink, flush_interval_s=0.005)
+        client.emit({"record_type": "epoch", "schema_version": 1})
+        client.emit(sample_epoch_record())
+        client.flush(timeout=10)
+        st = client.stats()
+        assert st["dropped_invalid"] == 1 and st["exported"] == 1
+        client.close()
+
+    def test_breaker_trips_on_sink_failure_then_recovers(self):
+        # sink fails its first 2 writes, then heals; threshold 2 trips the
+        # breaker on exactly those failures; cooldown 0 => next batch is
+        # the half-open probe and it recloses the breaker
+        sink = MemorySink(fail_until=2)
+        client = ExportClient(
+            sink, batch_size=1, flush_interval_s=0.005,
+            breaker=CircuitBreaker(failure_threshold=2, cooldown_s=0.0),
+            degrade_after_trips=100)
+        client.emit(sample_epoch_record())
+        client.emit(sample_epoch_record())
+        client.flush(timeout=10)
+        st = client.stats()
+        assert st["sink_failures"] == 2
+        assert st["breaker_trips"] == 1
+        assert st["dropped_sink_failure"] == 2
+        client.emit(sample_epoch_record())    # half-open probe
+        client.flush(timeout=10)
+        st = client.stats()
+        assert st["breaker_state"] == "closed" and st["exported"] == 1
+        assert not st["degraded"]
+        client.close()
+
+    def test_open_breaker_sheds_at_emit(self):
+        t = [0.0]
+        sink = MemorySink()
+        breaker = CircuitBreaker(failure_threshold=1, cooldown_s=100.0,
+                                 clock=lambda: t[0])
+        client = ExportClient(sink, flush_interval_s=0.005, breaker=breaker)
+        breaker.record_failure()              # force open
+        assert not client.emit(sample_epoch_record())
+        st = client.stats()
+        assert st["dropped_breaker_open"] == 1 and st["emitted"] == 0
+        t[0] = 200.0                          # cooldown elapsed: accept again
+        assert client.emit(sample_epoch_record())
+        client.flush(timeout=10)
+        assert client.stats()["exported"] == 1
+        client.close()
+
+    def test_dead_sink_degrades_to_noop(self):
+        sink = MemorySink(fail_always=True)
+        client = ExportClient(
+            sink, batch_size=1, flush_interval_s=0.005,
+            breaker=CircuitBreaker(failure_threshold=1, cooldown_s=0.0),
+            degrade_after_trips=3)
+        for _ in range(50):
+            client.emit(sample_epoch_record())
+        client.flush(timeout=10)
+        st = client.stats()
+        assert st["degraded"] is True
+        assert st["breaker_trips"] >= 3 and st["exported"] == 0
+        # noop behaviour from here on: emit refuses instantly
+        assert client.emit(sample_epoch_record()) is False
+        assert client.stats()["dropped_degraded"] >= 1
+        client.close()
+
+    def test_bind_labels_scenario_and_shares_counters(self):
+        sink = MemorySink()
+        client = ExportClient(sink, flush_interval_s=0.005)
+        bound = client.bind(scenario="bound_name")
+        bound.emit(sample_epoch_record())
+        rec = sample_epoch_record()
+        del rec["scenario"]
+
+        class Rec:
+            epoch = 0; lane = "prefetch"; time_s = 1.0; access_s = 1.0
+            host_tax_s = 0.0; migration_s = 0.0; hidden_s = 0.0
+            accuracy = 0.5; coverage = 0.5; quality = 1.0
+            resident = 1; promoted = 0; demoted = 0; host_events = 0.0
+        bound.export_epoch_record(Rec())
+        client.flush(timeout=10)
+        assert client.stats()["exported"] == 2
+        assert sink.snapshot()[1]["scenario"] == "bound_name"
+        with pytest.raises(TypeError):
+            client.bind(region="us-east-1")
+        client.close()
+
+    def test_close_idempotent_and_noop_client_inert(self):
+        client = ExportClient(MemorySink())
+        client.close()
+        client.close()
+        noop = NoopClient()
+        assert noop.emit(sample_epoch_record()) is False
+        assert noop.bind(scenario="x") is noop
+        noop.flush(); noop.close()
+        assert noop.stats()["emitted"] == 0
+
+    def test_interpreter_exit_drains_queue(self, tmp_path):
+        """Satellite: atexit shutdown — a process that exits without
+        close() still lands every emitted record in the JSONL sink."""
+        out = tmp_path / "telemetry.jsonl"
+        code = f"""
+        import json
+        from repro.export import ExportClient, JsonlSink
+
+        rec = {json.dumps(sample_epoch_record())}
+        client = ExportClient(JsonlSink({str(out)!r}),
+                              flush_interval_s=0.01)
+        for i in range(250):
+            r = dict(rec); r["epoch"] = i
+            assert client.emit(r)
+        # no close(), no flush(): atexit must drain
+        """
+        res = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             capture_output=True, text=True, env=SUBPROC_ENV,
+                             timeout=240, cwd=REPO)
+        assert res.returncode == 0, res.stderr
+        lines = out.read_text().splitlines()
+        assert len(lines) == 250
+        epochs = sorted(json.loads(l)["epoch"] for l in lines)
+        assert epochs == list(range(250))
+        for l in lines:
+            validate_record(json.loads(l))
+
+
+# =====================================================================
+# sinks
+# =====================================================================
+class TestSinks:
+    def test_jsonl_sink_round_trip(self, tmp_path):
+        path = tmp_path / "t.jsonl"
+        sink = JsonlSink(path)
+        recs = [sample_epoch_record() for _ in range(3)]
+        sink.write(recs[:2])
+        sink.write(recs[2:])
+        sink.close()
+        lines = path.read_text().splitlines()
+        assert [json.loads(l) for l in lines] == recs
+
+    def test_prometheus_text_exposition(self):
+        sink = PrometheusTextSink()
+        rec = sample_epoch_record()
+        sink.write([rec])
+        tenant = tenant_record_wire(type("R", (), dict(
+            epoch=0, lane="hinted", tenant="kv_a", time_s=1.0, access_s=1.0,
+            host_tax_s=0.0, migration_s=0.0, accuracy=0.25, coverage=0.75,
+            resident=8, promoted=0, demoted=0, n_fast=10, n_slow=2,
+            hot_k=8))(), scenario="fleet")
+        validate_record(tenant)
+        sink.write([tenant])
+        sink.set_counter("repro_dispatch_total", 12, kind="epoch_step")
+        text = sink.render()
+        assert "# TYPE repro_coverage_ratio gauge" in text
+        assert ('repro_coverage_ratio{lane="hinted",scenario="unit",'
+                'tenant=""} 0.8') in text
+        assert ('repro_coverage_ratio{lane="hinted",scenario="fleet",'
+                'tenant="kv_a"} 0.75') in text
+        assert 'repro_dispatch_total{kind="epoch_step"} 12' in text
+        # last write wins (gauge semantics)
+        rec2 = dict(rec, coverage=0.5)
+        sink.write([rec2])
+        assert ('repro_coverage_ratio{lane="hinted",scenario="unit",'
+                'tenant=""} 0.5') in sink.render()
+
+
+# =====================================================================
+# non-interference gates
+# =====================================================================
+class TestNonInterference:
+    @pytest.mark.parametrize("sync_every", [1, 3])
+    def test_bit_identical_and_zero_added_dispatches(self, sync_every):
+        scenario = make_scenario(n_epochs=6)
+        with rtmod.counting() as c_off:
+            base = run_scenario(scenario, hints=True, sync_every=sync_every)
+            off = dict(c_off.dispatch)    # views are live: snapshot now
+        sink = MemorySink()
+        client = ExportClient(sink, flush_interval_s=0.005)
+        with rtmod.counting() as c_on:
+            on = run_scenario(scenario, hints=True, sync_every=sync_every,
+                              export=client)
+            on_counts = dict(c_on.dispatch)
+        client.flush(timeout=30)
+        assert on_counts == off
+        assert on_counts["observe_all"] == 6
+        assert on_counts["epoch_step"] == 6           # 2 dispatches/epoch
+        assert json.dumps(base, sort_keys=True) == json.dumps(
+            on, sort_keys=True)
+        st = client.stats()
+        recs = sink.snapshot()
+        assert st["dropped_queue_full"] == 0 and st["sink_failures"] == 0
+        assert len(recs) == 6 * len(ALL_POLICIES) + len(ALL_POLICIES)
+        for rec in recs:
+            validate_record(rec)
+            assert rec["scenario"] == scenario.name
+        client.close()
+
+    def test_fleet_bit_identical_with_tenant_rows(self):
+        fleet = make_fleet(n_epochs=4)
+        with rtmod.counting() as c_off:
+            base = run_fleet(fleet, hints=False, sync_every=2)
+            off = dict(c_off.dispatch)
+        sink = MemorySink()
+        client = ExportClient(sink, flush_interval_s=0.005)
+        with rtmod.counting() as c_on:
+            on = run_fleet(fleet, hints=False, sync_every=2, export=client)
+            on_counts = dict(c_on.dispatch)
+        client.flush(timeout=30)
+        assert on_counts == off
+        for key in ("trajectory", "summary", "tenants"):
+            assert json.dumps(base[key], sort_keys=True) == json.dumps(
+                on[key], sort_keys=True), key
+        recs = sink.snapshot()
+        by_type = {}
+        for rec in recs:
+            validate_record(rec)
+            by_type.setdefault(rec["record_type"], []).append(rec)
+        L = len(ALL_POLICIES)
+        assert len(by_type["epoch"]) == 4 * L
+        assert len(by_type["tenant"]) == 4 * L * 2
+        assert len(by_type["lane_summary"]) == L
+        assert len(by_type["tenant_lane_summary"]) == L * 2
+        assert {r["tenant"] for r in by_type["tenant"]} == {"kv_a", "kv_b"}
+        client.close()
+
+    def test_reference_path_exports_too(self):
+        rt = make_runtime(fused=False, policies=("hmu_oracle", "hinted"))
+        sink = MemorySink()
+        rt.export = ExportClient(sink, flush_interval_s=0.005)
+        rt.run(make_epochs(3))
+        rt.export.flush(timeout=30)
+        recs = sink.snapshot()
+        assert len(recs) == 3 * 2
+        for rec in recs:
+            validate_record(rec)
+        rt.export.close()
+
+    def test_dead_sink_never_stalls_or_corrupts_run(self):
+        """The acceptance gate: a sink that fails every write trips the
+        breaker to noop; run() neither stalls nor raises, and the
+        trajectory is STILL bit-identical to the export-off run."""
+        scenario = make_scenario(n_epochs=6)
+        base = run_scenario(scenario, hints=False, sync_every=3)
+        client = ExportClient(
+            MemorySink(fail_always=True), batch_size=1,
+            flush_interval_s=0.005,
+            breaker=CircuitBreaker(failure_threshold=1, cooldown_s=0.0),
+            degrade_after_trips=2)
+        t0 = time.monotonic()
+        on = run_scenario(scenario, hints=False, sync_every=3,
+                          export=client)
+        elapsed = time.monotonic() - t0
+        client.flush(timeout=30)
+        assert json.dumps(base, sort_keys=True) == json.dumps(
+            on, sort_keys=True)
+        st = client.stats()
+        assert st["exported"] == 0
+        assert st["degraded"] or st["breaker_trips"] >= 1
+        assert elapsed < 120          # no stall (generous CI headroom)
+        client.close()
+
+    def test_midstream_exception_still_flushes_and_exports_tail(self):
+        """Satellite bugfix: run() killed mid-stream flushes the pipelined
+        partial-tail buffer (sync_every=K) — no dispatched epoch's record
+        is lost, in-process or on the wire."""
+        class Boom(RuntimeError):
+            pass
+
+        def dying_stream(epochs, die_after):
+            for i, e in enumerate(epochs):
+                if i == die_after:
+                    raise Boom()
+                yield e
+
+        sink = MemorySink()
+        client = ExportClient(sink, flush_interval_s=0.005)
+        rt = make_runtime(sync_every=4, policies=("hmu_oracle", "hinted"),
+                          export=client)
+        with pytest.raises(Boom):
+            rt.run(dying_stream(make_epochs(10), die_after=6))
+        # 6 epochs dispatched: one full buffer of 4 + a partial tail of 2
+        assert all(len(recs) == 6 for recs in rt.records.values())
+        client.flush(timeout=30)
+        recs = sink.snapshot()
+        assert len(recs) == 6 * 2
+        assert sorted({r["epoch"] for r in recs}) == list(range(6))
+        # and the flushed records match an unkilled run bit for bit
+        rt2 = make_runtime(sync_every=4, policies=("hmu_oracle", "hinted"))
+        with pytest.raises(Boom):
+            rt2.run(dying_stream(make_epochs(10), die_after=6))
+        for lane in ("hmu_oracle", "hinted"):
+            assert [r.to_dict() for r in rt.records[lane]] == \
+                   [r.to_dict() for r in rt2.records[lane]]
+        client.close()
+
+    def test_tracemalloc_budget(self):
+        """The export path's own peak host allocation stays bounded: the
+        queue is the only buffer, so memory is O(queue_size), not
+        O(records)."""
+        class DiscardSink:
+            def write(self, records):
+                pass
+
+        rec = sample_epoch_record()
+        client = ExportClient(DiscardSink(), queue_size=1024,
+                              flush_interval_s=0.002)
+        tracemalloc.start()
+        try:
+            for i in range(20_000):
+                r = dict(rec)
+                r["epoch"] = i
+                client.emit(r)
+            client.flush(timeout=60)
+            _, peak = tracemalloc.get_traced_memory()
+        finally:
+            tracemalloc.stop()
+        st = client.stats()
+        assert st["emitted"] + st["dropped_queue_full"] == 20_000
+        # 20k records through a 1024-deep queue; budget is ~queue_size
+        # records (<~1 KB each) plus converter overhead, far below the
+        # O(records) ~20 MB an unbounded buffer would cost
+        assert peak < 8 * 1024 * 1024, f"export path peaked at {peak} bytes"
+        client.close()
+
+    def test_export_on_vs_off_memory_overhead_bounded(self):
+        """tracemalloc budget on the real epoch loop: export-on peak host
+        memory stays within a fixed budget of export-off."""
+        scenario = make_scenario(n_epochs=4)
+        run_scenario(scenario, hints=False)     # warm jit caches
+
+        tracemalloc.start()
+        try:
+            run_scenario(scenario, hints=False)
+            _, peak_off = tracemalloc.get_traced_memory()
+        finally:
+            tracemalloc.stop()
+
+        class DiscardSink:
+            def write(self, records):
+                pass
+
+        client = ExportClient(DiscardSink(), flush_interval_s=0.005)
+        tracemalloc.start()
+        try:
+            run_scenario(scenario, hints=False, export=client)
+            client.flush(timeout=30)
+            _, peak_on = tracemalloc.get_traced_memory()
+        finally:
+            tracemalloc.stop()
+        client.close()
+        budget = 4 * 1024 * 1024
+        assert peak_on - peak_off < budget, (
+            f"export added {peak_on - peak_off} bytes peak "
+            f"(off={peak_off}, on={peak_on})")
