@@ -109,7 +109,7 @@ def table1_dlrm():
 # ============================================================= epoch runtime
 def epoch_runtime(json_mode: bool = False, scale: str = "full",
                   scenarios=None, faults: bool = False,
-                  export: bool = False):
+                  export: bool = False, kernels: bool = False):
     """Online multi-epoch tiering: fused observe_all + per-epoch migration.
     Emits the full per-epoch trajectory as JSON (the time-series artifact).
 
@@ -153,6 +153,8 @@ def epoch_runtime(json_mode: bool = False, scale: str = "full",
             _bench_faults(dest, scale)
         if export:
             _bench_export(dest, scale)
+        if kernels:
+            _bench_kernels(dest, scale)
 
 
 ALL_SCENARIOS = ("dlrm", "kv_cache", "moe_experts", "mmap_bench", "fleet")
@@ -765,6 +767,193 @@ def _bench_export(dest: Path, scale: str):
         raise SystemExit(1)
 
 
+def _bench_kernels(dest: Path, scale: str):
+    """Pallas telemetry-kernel bench -> BENCH_kernels.json.
+
+    The kernels' contract is *bit-identity with the XLA paths they replace*
+    — a select kernel that reorders ties or a scatter kernel that drops a
+    histogram count would silently skew every downstream coverage number.
+    So the gates are exact, CI-fatal, and run the kernel bodies through the
+    Pallas interpreter (``interpret=True``) so a CPU-only CI executes the
+    same code a TPU compiles:
+
+      1. per size: ``hist_select.kth_key_u`` == its jnp oracle, and
+         ``select_top_k`` / ``top_k_mask`` / ``segment_top_k_mask`` with a
+         backend == without (values, indices, tie-breaks, quota sentinels);
+      2. per size: ``observe_scatter`` == its jnp oracle, with and without
+         a fault-model keep mask, including out-of-range padding ids;
+      3. the fused runtime with ``use_pallas=True`` reproduces the
+         ``use_pallas=False`` records and final placements bit for bit —
+         plain, under tenant quotas (the segmented select), and under
+         faults — while the epoch loop still costs exactly 2 dispatches
+         and at most one trace of the fused step.
+
+    Wall-time rows compare the XLA select/scatter against the interpreted
+    kernels; they are parity-run timings, not TPU performance (the
+    interpreter is orders slower than a compiled kernel — compiled numbers
+    need TPU hardware).
+    """
+    import json
+    import jax.numpy as jnp
+    from repro.core import runtime as rtmod
+    from repro.core import selectk
+    from repro.core.runtime import EpochRuntime, Tenancy
+    from repro.faults import FaultModel
+    from repro.kernels.dispatch import PallasBackend
+    from repro.kernels.hist_select import kth_key_u, kth_key_u_ref
+    from repro.kernels.observe_scatter import observe_scatter
+
+    smoke = scale == "smoke"
+    rng = np.random.default_rng(29)
+    backend = PallasBackend(interpret=True, select_tile_n=1024,
+                            scatter_tile_m=512)
+    report = {"scale": scale, "interpret": True, "gates": {},
+              "select": [], "scatter": []}
+    ok = True
+
+    # -- 1. hist_select parity + timing per size ------------------------
+    select_sizes = [(997, 2), (8192, 1)] if smoke else \
+                   [(997, 4), (8192, 2), (131072, 1)]
+    for n, B in select_sizes:
+        k = max(n // 10, 1)
+        u = rng.integers(0, np.iinfo(np.uint32).max, size=(B, n),
+                         dtype=np.uint32)
+        u[:, : n // 7] = u[:, 0:1]              # duplicate run: tie-breaks
+        u = jnp.asarray(u)
+        seg = jnp.zeros((n,), jnp.int32)
+        t_ref = kth_key_u_ref(u, seg, (k,))
+        t_pal = kth_key_u(u, seg, (k,), tile_n=backend.select_tile_n,
+                          use_pallas=True, interpret=True)
+        kth_ok = bool(jnp.array_equal(t_ref, t_pal))
+
+        key = jnp.asarray(
+            rng.integers(0, 2**30, size=(B, n), dtype=np.int32))
+        v0, i0, m0 = selectk.select_top_k(key, k, return_mask=True)
+        t0 = time.perf_counter()
+        v1, i1, m1 = selectk.select_top_k(key, k, return_mask=True)
+        xla_s = _elapsed(t0, v1, i1, m1)
+        vp, ip, mp = selectk.select_top_k(key, k, return_mask=True,
+                                          backend=backend)
+        t0 = time.perf_counter()
+        vp, ip, mp = selectk.select_top_k(key, k, return_mask=True,
+                                          backend=backend)
+        pal_s = _elapsed(t0, vp, ip, mp)
+        sel_ok = all(bool(jnp.array_equal(a, b))
+                     for a, b in ((v0, vp), (i0, ip), (m0, mp)))
+
+        bounds = (0, n // 3, n // 2, n)
+        caps = (max(n // 30, 1), 0, n)          # incl. zero-quota sentinel
+        sm0 = selectk.segment_top_k_mask(key, bounds, caps)
+        smp = selectk.segment_top_k_mask(key, bounds, caps, backend=backend)
+        seg_ok = bool(jnp.array_equal(sm0, smp))
+
+        point_ok = kth_ok and sel_ok and seg_ok
+        report["select"].append({
+            "n": n, "rows": B, "k": k, "bit_identical": point_ok,
+            "xla_us": xla_s * 1e6, "pallas_interpret_us": pal_s * 1e6})
+        ok &= point_ok
+        _row(f"kernels_hist_select_n{n}", pal_s * 1e6,
+             f"bit_identical={point_ok} xla={xla_s * 1e6:.0f}us "
+             f"interpret={pal_s * 1e6:.0f}us (parity run, not TPU perf)")
+
+    # -- 2. observe_scatter parity + timing per size --------------------
+    scatter_sizes = [(4096, 997)] if smoke else [(4096, 997), (65536, 20000)]
+    for M, n_blocks in scatter_sizes:
+        ids = rng.integers(-3, n_blocks + 3, size=(M,)).astype(np.int32)
+        keep = rng.random(M) < 0.7
+        ids, keep = jnp.asarray(ids), jnp.asarray(keep)
+        cursor = jnp.asarray(11, jnp.int32)
+        period = 37
+        args = dict(n_blocks=n_blocks, period=period)
+        point_ok = True
+        for km in (None, keep):
+            h0, p0 = observe_scatter(ids, cursor, keep=km,
+                                     use_pallas=False, **args)
+            h1, p1 = observe_scatter(ids, cursor, keep=km,
+                                     tile_m=backend.scatter_tile_m,
+                                     use_pallas=True, interpret=True, **args)
+            point_ok &= bool(jnp.array_equal(h0, h1))
+            point_ok &= bool(jnp.array_equal(p0, p1))
+        t0 = time.perf_counter()
+        hx, px = observe_scatter(ids, cursor, use_pallas=False, **args)
+        xla_s = _elapsed(t0, hx, px)
+        t0 = time.perf_counter()
+        hp, pp = observe_scatter(ids, cursor, tile_m=backend.scatter_tile_m,
+                                 use_pallas=True, interpret=True, **args)
+        pal_s = _elapsed(t0, hp, pp)
+        report["scatter"].append({
+            "m": M, "n_blocks": n_blocks, "bit_identical": point_ok,
+            "xla_us": xla_s * 1e6, "pallas_interpret_us": pal_s * 1e6})
+        ok &= point_ok
+        _row(f"kernels_observe_scatter_m{M}", pal_s * 1e6,
+             f"bit_identical={point_ok} xla={xla_s * 1e6:.0f}us "
+             f"interpret={pal_s * 1e6:.0f}us (parity run, not TPU perf)")
+    report["gates"]["select_bit_identical"] = all(
+        p["bit_identical"] for p in report["select"])
+    report["gates"]["scatter_bit_identical"] = all(
+        p["bit_identical"] for p in report["scatter"])
+
+    # -- 3. fused runtime: kernels on == kernels off, still 2 dispatches
+    n = 1_000 if smoke else 4_000
+    k = n // 10
+    n_epochs = 4 if smoke else 6
+    shape = (2, 4_000) if smoke else (2, 16_000)
+    policies = ("hmu_oracle", "hinted", "nb_two_touch")
+    eps = [(rng.zipf(1.3, size=shape) % n).astype(np.int32)
+           for _ in range(n_epochs)]
+
+    def run(use_pallas, **kw):
+        rt = EpochRuntime(n, k, policies=policies,
+                          pebs_period=max(shape[0] * shape[1] // (4 * k), 1),
+                          nb_scan_rate=n // 4, fused=True, sync_every=2,
+                          use_pallas=use_pallas,
+                          pallas_interpret=use_pallas or None, **kw)
+        with rtmod.counting() as c:
+            t0 = time.perf_counter()
+            rt.run(iter(eps))
+            wall = _elapsed(t0, rt.block_until_ready())
+            disp = (c.dispatch["observe_all"]
+                    + c.dispatch["epoch_step"]) / n_epochs
+            traces = c.trace["epoch_step"]
+        return rt, wall, disp, traces
+
+    ten = Tenancy(offsets=(0, n // 3, n), hot_k=(k // 4, k // 4),
+                  caps=(k // 4, k // 2))
+    fm = FaultModel.create(hmu_counter_bits=10, pebs_drop_p=0.2,
+                           nb_stall_p=0.2, seed=29, n_blocks=n)
+    runtime_gate = True
+    for label, kw in (("plain", {}), ("quotas", {"tenancy": ten}),
+                      ("faults", {"faults": fm})):
+        off, _, _, _ = run(False, **kw)
+        on, wall, disp, traces = run(True, **kw)
+        identical = all(
+            [a.to_dict() for a in off.records[lane]]
+            == [b.to_dict() for b in on.records[lane]]
+            and np.array_equal(off.lanes[lane].slot_to_block,
+                               on.lanes[lane].slot_to_block)
+            for lane in policies)
+        cfg_ok = identical and disp <= 2 and traces <= 1
+        report[f"runtime_{label}"] = {
+            "bit_identical": identical, "dispatches_per_epoch": disp,
+            "traces": traces, "wall_s": wall}
+        runtime_gate &= cfg_ok
+        _row(f"kernels_runtime_{label}", wall / n_epochs * 1e6,
+             f"bit_identical={identical} dispatches={disp:.0f}/ep "
+             f"traces={traces}")
+    report["gates"]["runtime_bit_identical_2_dispatch"] = runtime_gate
+    ok &= runtime_gate
+
+    out_path = dest / ("BENCH_kernels.json" if scale == "full"
+                       else "bench_kernels.smoke.json")
+    out_path.write_text(json.dumps(report, indent=1))
+    _row("kernels_bench_artifact", 0.0, str(out_path))
+    if not ok:
+        print("FAIL: kernel gate broke — pallas-vs-XLA bit-identity "
+              "(select/scatter/runtime) or dispatch/trace creep "
+              f"(gates={report['gates']})", file=sys.stderr)
+        raise SystemExit(1)
+
+
 # =========================================================== telemetry sweep
 def telemetry_sweep():
     """§V: PEBS coverage vs sampling overhead; HMU log capacity vs drops."""
@@ -888,6 +1077,12 @@ def main() -> None:
                          "bit-identity + 2-dispatch epochs + "
                          "hardened-beats-naive, write results/"
                          "BENCH_faults.json")
+    ap.add_argument("--kernels", action="store_true",
+                    help="epoch_runtime --json: bench the Pallas telemetry "
+                         "kernels (hist_select / observe_scatter, interpret "
+                         "mode), gate pallas-vs-XLA bit-identity per size + "
+                         "fused-runtime bit-identity at 2 dispatches/epoch, "
+                         "write results/BENCH_kernels.json")
     ap.add_argument("--export", action="store_true",
                     help="epoch_runtime --json: bench the telemetry export "
                          "plane (epoch time on/off, records/s, drop "
@@ -905,6 +1100,9 @@ def main() -> None:
     if args.export and not args.json:
         ap.error("--export gates run inside the --json bench; "
                  "add --json (or drop --export)")
+    if args.kernels and not args.json:
+        ap.error("--kernels gates run inside the --json bench; "
+                 "add --json (or drop --kernels)")
     print("name,us_per_call,derived")
     for name, fn in ALL.items():
         if args.only and name != args.only:
@@ -912,7 +1110,7 @@ def main() -> None:
         if name == "epoch_runtime":
             fn(json_mode=args.json, scale=args.scale,
                scenarios=args.scenarios, faults=args.faults,
-               export=args.export)
+               export=args.export, kernels=args.kernels)
         else:
             fn()
 

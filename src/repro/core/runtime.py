@@ -119,6 +119,7 @@ from . import metrics, policy, selectk
 from . import telemetry as tel
 from ..faults.model import (CARRY_BASE, COLLECTORS, LANE_COLLECTOR,
                             FaultModel, Hardening)
+from ..kernels.dispatch import PallasBackend, resolve_backend
 from .costmodel import CXL_SYSTEM, MemSystem, split_accesses_by_tier
 from .placement import Placement, apply_plan, demote_idle
 
@@ -366,6 +367,7 @@ class _FusedCfg(NamedTuple):
     reactive_hot_threshold: Optional[int]
     tenancy: Optional[Tenancy] = None
     hardening: Optional[Hardening] = None
+    pallas: Optional[PallasBackend] = None
 
 
 @jax.tree_util.register_dataclass
@@ -646,19 +648,20 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
     quotas = ten is not None and ten.caps is not None
     if quotas:
         protected = selectk.segment_top_k_mask(key_rows, ten.offsets,
-                                               ten.caps)
+                                               ten.caps, backend=cfg.pallas)
         key_rows = jnp.where(protected, key_rows,
                              jnp.iinfo(jnp.int32).min)
 
     # -- one O(n) selection per unique signal, fanned out to lanes
-    vals_u, ids_u, sel_u = selectk.select_top_k(key_rows, k, return_mask=True)
+    vals_u, ids_u, sel_u = selectk.select_top_k(key_rows, k, return_mask=True,
+                                                backend=cfg.pallas)
     vals, ids = vals_u[lane_row], ids_u[lane_row]           # (L, k)
 
     # -- account the epoch under the placement that served it
     #    (pre-migration).  The hot set is workload truth: with faults or
     #    staleness the hmu selection row no longer ranks the truth, so it
     #    gets its own exact top-K; otherwise the oracle row doubles as it.
-    hot = (selectk.top_k_mask(d_true, k)
+    hot = (selectk.top_k_mask(d_true, k, backend=cfg.pallas)
            if quotas or faulty or state.stale is not None
            else sel_u[hmu_row])                    # epoch's true top-K set
     fast0 = state.placement.fast_mask              # (L, n)
@@ -713,7 +716,7 @@ def _epoch_step(state: _FusedState, epoch_accesses: jax.Array,
             selectk.top_k_mask(
                 jax.lax.slice_in_dim(d_true, ten.offsets[t],
                                      ten.offsets[t + 1]),
-                ten.hot_k[t])
+                ten.hot_k[t], backend=cfg.pallas)
             for t in range(ten.n_tenants)
         ]
         t_hot = jnp.concatenate(hot_parts)
@@ -816,6 +819,8 @@ class EpochRuntime:
         faults: Optional[FaultModel] = None,
         hardening: Optional[Hardening] = None,
         export=None,
+        use_pallas: Optional[bool] = None,
+        pallas_interpret: Optional[bool] = None,
     ):
         unknown = set(policies) - set(ALL_POLICIES)
         if unknown:
@@ -834,6 +839,20 @@ class EpochRuntime:
             hardening = Hardening.make(**dict(hardening))
         if hardening is not None:
             hardening.validate()
+        # Pallas kernels are single-device VMEM programs; under a mesh the
+        # sharded XLA path stays authoritative.  use_pallas=None quietly
+        # resolves to off in that case; an explicit True is a config error.
+        if use_pallas and mesh is not None:
+            raise ValueError("use_pallas=True is incompatible with mesh "
+                             "sharding (the kernels carry whole histograms "
+                             "in one core's VMEM); drop mesh or use_pallas")
+        if use_pallas and not fused:
+            raise ValueError("the Pallas kernels run inside the fused epoch "
+                             "step; the reference path stays the pure-XLA "
+                             "bit-identity oracle — pass fused=True or drop "
+                             "use_pallas")
+        self._pallas = (resolve_backend(use_pallas, pallas_interpret)
+                        if fused and mesh is None else None)
         self.sync_every = int(sync_every)
         if self.sync_every < 1:
             raise ValueError(f"sync_every must be >= 1, got {sync_every!r}")
@@ -902,6 +921,7 @@ class EpochRuntime:
                 reactive_hot_threshold=self.reactive_hot_threshold,
                 tenancy=self.tenancy,
                 hardening=self.hardening,
+                pallas=self._pallas,
             )
             def zeros_n():
                 # distinct buffers (not one shared array) so donation works
@@ -1267,7 +1287,8 @@ class EpochRuntime:
     def _step_fused(self, batches: np.ndarray):
         state = self._state
         DISPATCH_COUNTS["observe_all"] += 1
-        bundle = tel.observe_all(state.bundle, jnp.asarray(batches))
+        bundle = tel.observe_all(state.bundle, jnp.asarray(batches),
+                                 pallas=self._pallas)
         state = dataclasses.replace(state, bundle=bundle)
         # Pipelining: this epoch's observe_all is already dispatched when a
         # full record buffer forces the previous K epochs' batched sync, so

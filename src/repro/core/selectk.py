@@ -22,11 +22,24 @@ All keys are int32.  Non-negative float32 scores participate via
 order-isomorphic to their int32 interpretation), so float and integer lanes
 share one selection kernel.  Every function is shape-polymorphic over leading
 batch (lane) axes and safe under ``vmap``/``jit``/SPMD partitioning.
+
+All selection entry points take an optional ``backend`` (a
+``repro.kernels.dispatch.PallasBackend``): when set and ``k`` is static, the
+32-round threshold search is replaced by the ``kernels.hist_select`` Pallas
+radix-histogram kernel (4 grid passes instead of 32), bit-identical by the
+same largest-``t``-with-``count(u >= t) >= k`` definition.  ``None`` (the
+default) keeps the pure-XLA path.
 """
 from __future__ import annotations
 
+from typing import Optional
+
+import numpy as np
+
 import jax
 import jax.numpy as jnp
+
+from ..kernels import hist_select
 
 __all__ = [
     "sortable_key", "select_top_k", "top_k_mask", "stable_rank_sparse",
@@ -35,13 +48,34 @@ __all__ = [
 
 _SIGN = jnp.uint32(0x80000000)
 
+# Eager-input contract checking for sortable_key (skipped under tracing —
+# the fused epoch step cannot afford a host round-trip); set False to
+# silence in long host-loop runs.
+CHECK_SORTABLE_KEYS = True
+
 
 def sortable_key(x: jax.Array) -> jax.Array:
-    """float32 -> int32 key with the same ordering, provided every value is
-    either non-negative or equal to one shared negative sentinel (negative
-    floats map below all non-negative ones, but order *among distinct*
-    negatives would be reversed)."""
-    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    """float32 -> int32 key with the same ordering.
+
+    Contract: every value must be either **non-negative** or equal to **one
+    shared negative sentinel** (e.g. the hinted lane's score sentinel -1).
+    IEEE-754 bit patterns of non-negative floats are order-isomorphic to
+    their int32 interpretation, and any negative float's pattern compares
+    below all non-negative ones — but order *among distinct* negatives is
+    REVERSED, so two different negative values would rank backwards.
+    Concrete (non-traced) inputs are checked; traced inputs are the
+    caller's responsibility (the fused runtime's keys are non-negative by
+    construction)."""
+    x32 = x.astype(jnp.float32)
+    if CHECK_SORTABLE_KEYS and not isinstance(x32, jax.core.Tracer):
+        neg = np.asarray(x32)
+        neg = neg[neg < 0]
+        if neg.size and np.unique(neg).size > 1:
+            raise ValueError(
+                "sortable_key: negative inputs must all equal one shared "
+                f"sentinel; got distinct negatives {np.unique(neg)[:4]} — "
+                "their relative order would be reversed")
+    return jax.lax.bitcast_convert_type(x32, jnp.int32)
 
 
 def _to_u(key: jax.Array) -> jax.Array:
@@ -52,17 +86,25 @@ def _to_u(key: jax.Array) -> jax.Array:
 def prefix_sum(x: jax.Array, chunk: int = 256) -> jax.Array:
     """Inclusive int32 prefix sum along the last axis.  XLA's cumsum on CPU
     runs log(n) full passes; chunking to (m, chunk) caps the scanned width,
-    cutting ~1/3 of the wall time at 1M elements.  Falls back to
-    ``jnp.cumsum`` when the length doesn't divide."""
+    cutting ~1/3 of the wall time at 1M elements.  Non-dividing lengths are
+    zero-padded up to the next chunk multiple (padding past the end never
+    feeds back into the first n prefixes), so the chunked path is taken for
+    EVERY length — it used to fall back to a full ``jnp.cumsum`` whenever
+    ``n % chunk != 0``, silently costing the log(n) passes on exactly the
+    ragged sizes real segment slices produce."""
     xi = x.astype(jnp.int32)
     n = xi.shape[-1]
-    if n % chunk:
-        return jnp.cumsum(xi, axis=-1)
-    xr = xi.reshape(xi.shape[:-1] + (n // chunk, chunk))
+    if n == 0:
+        return xi
+    pad = (-n) % chunk
+    if pad:
+        xi = jnp.pad(xi, [(0, 0)] * (xi.ndim - 1) + [(0, pad)])
+    xr = xi.reshape(xi.shape[:-1] + (xi.shape[-1] // chunk, chunk))
     within = jnp.cumsum(xr, axis=-1)
     tot = within[..., -1]
     offs = jnp.cumsum(tot, axis=-1) - tot
-    return (within + offs[..., None]).reshape(xi.shape)
+    out = (within + offs[..., None]).reshape(xi.shape)
+    return out[..., :n] if pad else out
 
 
 def _kth_largest(u: jax.Array, k) -> jax.Array:
@@ -79,11 +121,27 @@ def _kth_largest(u: jax.Array, k) -> jax.Array:
     return jax.lax.fori_loop(0, 32, body, jnp.zeros(u.shape[:-1], jnp.uint32))
 
 
-def _selection_mask(u: jax.Array, k):
+def _kth_dispatch(u: jax.Array, k, backend) -> jax.Array:
+    """k-th-largest threshold: the hist_select radix kernel when a Pallas
+    backend is live and ``k`` is static (4 grid passes), the 32-round
+    bitwise search otherwise.  Identical thresholds either way: both
+    compute the largest ``t`` with ``count(u >= t) >= k``."""
+    if (backend is None or not isinstance(k, int)
+            or u.shape[-1] > hist_select.MAX_N):
+        return _kth_largest(u, k)
+    n = u.shape[-1]
+    t = hist_select.kth_key_u(
+        u.reshape((-1, n)), jnp.zeros((n,), jnp.int32), (k,),
+        tile_n=backend.select_tile_n, use_pallas=True,
+        interpret=backend.interpret)
+    return t.reshape(u.shape[:-1])
+
+
+def _selection_mask(u: jax.Array, k, backend=None):
     """Boolean mask of the k largest (ties resolved lowest-index-first) and
     its inclusive prefix count.  ``k``: static int or per-batch array."""
     k_b = k[..., None] if isinstance(k, jax.Array) else k
-    t = _kth_largest(u, k)[..., None]
+    t = _kth_dispatch(u, k, backend)[..., None]
     gt = u > t
     eq = u == t
     n_gt = jnp.sum(gt.astype(jnp.int32), axis=-1, keepdims=True)
@@ -92,9 +150,9 @@ def _selection_mask(u: jax.Array, k):
     return sel, prefix_sum(sel)
 
 
-def top_k_mask(key: jax.Array, k: int) -> jax.Array:
+def top_k_mask(key: jax.Array, k: int, *, backend=None) -> jax.Array:
     """(..., n) bool: membership in ``lax.top_k(key, k)``'s selection."""
-    return _selection_mask(_to_u(key), min(k, key.shape[-1]))[0]
+    return _selection_mask(_to_u(key), min(k, key.shape[-1]), backend)[0]
 
 
 def bottom_k_mask(key: jax.Array, counts) -> jax.Array:
@@ -121,7 +179,8 @@ def compact(csel: jax.Array, k: int) -> jax.Array:
     return pick(csel)
 
 
-def select_top_k(key: jax.Array, k: int, return_mask: bool = False):
+def select_top_k(key: jax.Array, k: int, return_mask: bool = False,
+                 *, backend=None):
     """Drop-in ``lax.top_k(key, k)`` on int32 keys: ``(values, indices)``,
     values descending, ties lowest-index-first — in O(n) passes plus one
     O(k log k) sort of the survivors.  ``return_mask=True`` also returns the
@@ -129,7 +188,7 @@ def select_top_k(key: jax.Array, k: int, return_mask: bool = False):
     n = key.shape[-1]
     k = min(k, n)
     u = _to_u(key)
-    sel, csel = _selection_mask(u, k)
+    sel, csel = _selection_mask(u, k, backend)
     ids = compact(csel, k)                        # ascending index order
     u_sel = jnp.take_along_axis(u, ids, axis=-1)
 
@@ -146,7 +205,8 @@ def select_top_k(key: jax.Array, k: int, return_mask: bool = False):
     return vals, ids_sorted
 
 
-def segment_top_k_mask(key: jax.Array, bounds, caps) -> jax.Array:
+def segment_top_k_mask(key: jax.Array, bounds, caps, *,
+                       backend=None) -> jax.Array:
     """Per-segment top-k membership over static contiguous segments.
 
     ``key`` (..., n) int32 selection keys; ``bounds`` a static length-(S+1)
@@ -162,13 +222,47 @@ def segment_top_k_mask(key: jax.Array, bounds, caps) -> jax.Array:
     ``caps[t]`` best candidates in the running no matter how loud a
     neighbouring tenant's counters are, at the cost of one O(n_t)
     threshold-select per segment (no sorts).
+
+    With a Pallas ``backend`` the per-segment thresholds all come out of ONE
+    ``hist_select`` invocation (the caps become per-tenant rows of the radix
+    histogram) and the per-segment tie-break ranks are recovered from global
+    prefix sums rebased at the static segment starts — bit-identical to the
+    per-slice path, without its S separate selects.
     """
-    parts = [
-        top_k_mask(jax.lax.slice_in_dim(key, int(a), int(b), axis=-1),
-                   min(int(cap), int(b) - int(a)))
-        for a, b, cap in zip(bounds, bounds[1:], caps)
-    ]
-    return jnp.concatenate(parts, axis=-1)
+    if backend is None:
+        parts = [
+            top_k_mask(jax.lax.slice_in_dim(key, int(a), int(b), axis=-1),
+                       min(int(cap), int(b) - int(a)))
+            for a, b, cap in zip(bounds, bounds[1:], caps)
+        ]
+        return jnp.concatenate(parts, axis=-1)
+
+    n = key.shape[-1]
+    edges = [int(b) for b in bounds]
+    lens = np.diff(np.asarray(edges))
+    ks = tuple(min(int(c), int(l)) for c, l in zip(caps, lens))
+    seg = np.repeat(np.arange(len(ks), dtype=np.int32), lens)
+    u = _to_u(key).reshape((-1, n))
+    t = hist_select.kth_key_u(
+        u, jnp.asarray(seg), ks, tile_n=backend.select_tile_n,
+        use_pallas=True, interpret=backend.interpret)       # (B, S) uint32
+
+    def widen(per_seg):             # (B, S) -> (B, n), constant per segment
+        return jnp.repeat(per_seg, lens, axis=-1, total_repeat_length=n)
+
+    t_elem = widen(t)
+    gt = u > t_elem
+    eq = u == t_elem
+    # per-segment prefix ranks = global inclusive prefix sums rebased at the
+    # (static) segment starts; exclusive-at-start values read via a 0-column
+    zero = jnp.zeros(u.shape[:-1] + (1,), jnp.int32)
+    cgt = jnp.concatenate([zero, prefix_sum(gt)], axis=-1)
+    ceq = jnp.concatenate([zero, prefix_sum(eq)], axis=-1)
+    n_gt = cgt[..., edges[1:]] - cgt[..., edges[:-1]]       # (B, S)
+    allow_eq = jnp.asarray(ks, jnp.int32)[None, :] - n_gt
+    eq_rank = ceq[..., 1:] - widen(ceq[..., edges[:-1]]) - 1
+    sel = gt | (eq & (eq_rank < widen(allow_eq)))
+    return sel.reshape(key.shape)
 
 
 def stable_rank_sparse(x: jax.Array, max_positive: int) -> jax.Array:

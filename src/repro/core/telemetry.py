@@ -64,6 +64,7 @@ from ..faults.model import (
     CARRY_BASE, CARRY_BITS, INT32_MAX, Counter64, FaultModel,
     counter_add, counter_init, counter_scaled_add, counter_zero_like,
 )
+from ..kernels.observe_scatter import observe_scatter
 
 __all__ = [
     "HMUState", "PEBSState", "NBState", "TelemetryBundle",
@@ -111,12 +112,16 @@ def hmu_init(n_blocks: int, log_capacity: int = 1 << 33) -> HMUState:
 
 
 def _hmu_observe(state: HMUState, block_ids: jax.Array, weight: int = 1,
-                 counter_max: Optional[jax.Array] = None) -> HMUState:
+                 counter_max: Optional[jax.Array] = None,
+                 hist: Optional[jax.Array] = None) -> HMUState:
     """Pure (un-jitted) HMU update — shared by the per-batch jit and the
     fused epoch scan so both paths are the *same traced computation* and
     therefore bit-identical.  ``counter_max`` is the saturation cap from a
     :class:`~repro.faults.FaultModel` (scalar or per-block); without one the
-    counters still clamp at int32 max instead of wrapping."""
+    counters still clamp at int32 max instead of wrapping.  ``hist`` (the
+    batch's precomputed (n_blocks,) access histogram, from the fused
+    ``observe_scatter`` kernel) replaces the scatter-add with the
+    elementwise-identical ``counts + hist * weight``."""
     flat = block_ids.reshape(-1)
     n = flat.shape[0] * weight
     if n >= CARRY_BASE:                      # static shape check
@@ -124,7 +129,8 @@ def _hmu_observe(state: HMUState, block_ids: jax.Array, weight: int = 1,
             f"one observe call adds {n} events; split calls below "
             f"{CARRY_BASE} so the hi/lo log counters carry exactly")
     cap = jnp.int32(INT32_MAX) if counter_max is None else counter_max
-    summed = state.counts.at[flat].add(weight, mode="drop")
+    summed = (state.counts.at[flat].add(weight, mode="drop")
+              if hist is None else state.counts + hist * weight)
     # Saturate instead of wrapping: a wrapped sum reads *less* than the old
     # count (two's complement), so `summed < counts` flags exactly the
     # blocks that crossed int32 max this call (per-call mass << 2**31).
@@ -214,15 +220,22 @@ def _pebs_sample_mask(state: PEBSState, n: int) -> jax.Array:
 
 
 def _pebs_apply(state: PEBSState, flat: jax.Array,
-                kept: jax.Array) -> PEBSState:
-    # scatter-add only surviving sampled positions (weight 0/1)
-    sampled = state.sampled.at[flat].add(kept.astype(jnp.int32), mode="drop")
+                kept: Optional[jax.Array],
+                pebs_hist: Optional[jax.Array] = None,
+                n_kept: Optional[jax.Array] = None) -> PEBSState:
+    # scatter-add only surviving sampled positions (weight 0/1); the fused
+    # kernel path hands the already-scattered histogram and the kept count
+    # instead of the per-position mask
+    sampled = (state.sampled.at[flat].add(kept.astype(jnp.int32),
+                                          mode="drop")
+               if pebs_hist is None else state.sampled + pebs_hist)
+    if n_kept is None:
+        n_kept = jnp.sum(kept).astype(jnp.int32)
     return dataclasses.replace(
         state,
         sampled=sampled,
         cursor=(state.cursor + flat.shape[0]) % state.period,
-        host_events=counter_add(state.host_events,
-                                jnp.sum(kept).astype(jnp.int32)),
+        host_events=counter_add(state.host_events, n_kept),
     )
 
 
@@ -289,11 +302,14 @@ def nb_init(n_blocks: int, scan_rate: int) -> NBState:
 
 
 def _nb_observe(state: NBState, block_ids: jax.Array,
-                stalled: Optional[jax.Array] = None) -> NBState:
+                stalled: Optional[jax.Array] = None,
+                touched: Optional[jax.Array] = None) -> NBState:
     """``stalled`` (a traced bool from the fault model) makes the scanner
     tick a no-op — no unmapping, no cursor advance — while the workload's
     touches still re-map pages as usual: faults stop *arriving*, they are
-    not merely delayed, which is what starves the NB lane's signal."""
+    not merely delayed, which is what starves the NB lane's signal.
+    ``touched`` (fused kernel path) is the batch's precomputed touched-set
+    mask, replacing the scatter over the id stream."""
     n_blocks = state.mapped.shape[0]
     # 1. scanner tick: unmap the next scan_rate blocks (cyclic)
     scan_idx = (state.scan_ptr + jnp.arange(state.scan_rate, dtype=jnp.int32)) % n_blocks
@@ -305,8 +321,10 @@ def _nb_observe(state: NBState, block_ids: jax.Array,
         advance = jnp.where(stalled, 0, state.scan_rate)
     mapped = state.mapped.at[scan_idx].set(False, mode="drop")
     # 2. workload touches: first touch of an unmapped block faults
-    flat = block_ids.reshape(-1)
-    touched = jnp.zeros((n_blocks,), jnp.bool_).at[flat].set(True, mode="drop")
+    if touched is None:
+        flat = block_ids.reshape(-1)
+        touched = jnp.zeros((n_blocks,), jnp.bool_).at[flat].set(
+            True, mode="drop")
     faulted = touched & ~mapped
     faults = state.faults + faulted.astype(jnp.int32)
     mapped = mapped | touched
@@ -383,7 +401,10 @@ def bundle_init(
     )
 
 
-def _count_observe(counts: jax.Array, block_ids: jax.Array) -> jax.Array:
+def _count_observe(counts: jax.Array, block_ids: jax.Array,
+                   hist: Optional[jax.Array] = None) -> jax.Array:
+    if hist is not None:
+        return counts + hist
     flat = block_ids.reshape(-1)
     return counts.at[flat].add(1, mode="drop")
 
@@ -394,31 +415,69 @@ def count_observe(counts: jax.Array, block_ids: jax.Array) -> jax.Array:
     return _count_observe(counts, block_ids)
 
 
-def _bundle_observe(bundle: TelemetryBundle, block_ids: jax.Array) -> TelemetryBundle:
+def _fused_scatter(bundle: TelemetryBundle, flat: jax.Array, pallas,
+                   keep: Optional[jax.Array] = None):
+    """One ``observe_scatter`` kernel pass over the batch's id stream ->
+    the access histogram and PEBS-sampled histogram every collector update
+    below is an affine function of."""
+    return observe_scatter(
+        flat, bundle.pebs.cursor,
+        n_blocks=bundle.true_counts.shape[0], period=bundle.pebs.period,
+        keep=keep, tile_m=pallas.scatter_tile_m, use_pallas=True,
+        interpret=pallas.interpret)
+
+
+def _bundle_observe(bundle: TelemetryBundle, block_ids: jax.Array,
+                    pallas=None) -> TelemetryBundle:
     f = bundle.faults
+    flat = block_ids.reshape(-1)
+    m = flat.shape[0]
     if f is None:
+        hist = pebs_hist = n_kept = touched = None
+        if pallas is not None:
+            hist, pebs_hist = _fused_scatter(bundle, flat, pallas)
+            # hits among the m stream positions = multiples of period in
+            # [cursor, cursor + m): exact closed form, no per-position mask
+            cur, per = bundle.pebs.cursor, bundle.pebs.period
+            n_kept = ((cur + m - 1) // per - (cur - 1) // per
+                      ).astype(jnp.int32)
+            touched = hist > 0
         return TelemetryBundle(
-            hmu=_hmu_observe(bundle.hmu, block_ids),
-            pebs=_pebs_observe(bundle.pebs, block_ids),
-            nb=_nb_observe(bundle.nb, block_ids),
-            true_counts=_count_observe(bundle.true_counts, block_ids),
+            hmu=_hmu_observe(bundle.hmu, block_ids, hist=hist),
+            pebs=(_pebs_apply(bundle.pebs, flat, None, pebs_hist=pebs_hist,
+                              n_kept=n_kept)
+                  if pallas is not None
+                  else _pebs_observe(bundle.pebs, block_ids)),
+            nb=_nb_observe(bundle.nb, block_ids, touched=touched),
+            true_counts=_count_observe(bundle.true_counts, block_ids,
+                                       hist=hist),
         )
     # fault injection: per-batch Bernoulli draws from the model's traced
     # rates.  Ground truth is never faulted — it is the evaluation's
     # reference, not a collector.
     key, k_drop, k_stall = jax.random.split(f.key, 3)
-    flat = block_ids.reshape(-1)
     drop_p = (f.pebs_drop_p if f.pebs_drop_p.ndim == 0
               else f.pebs_drop_p[flat])
     keep = jax.random.uniform(k_drop, flat.shape) >= drop_p
     stalled = jax.random.bernoulli(k_stall, f.nb_stall_p)
-    pebs, n_dropped = _pebs_observe_faulty(bundle.pebs, block_ids, keep)
+    if pallas is not None:
+        hist, pebs_hist = _fused_scatter(bundle, flat, pallas, keep=keep)
+        hit = _pebs_sample_mask(bundle.pebs, m)
+        pebs = _pebs_apply(bundle.pebs, flat, None, pebs_hist=pebs_hist,
+                           n_kept=jnp.sum(hit & keep).astype(jnp.int32))
+        n_dropped = jnp.sum(hit & ~keep).astype(jnp.int32)
+        touched = hist > 0
+    else:
+        hist = touched = None
+        pebs, n_dropped = _pebs_observe_faulty(bundle.pebs, block_ids, keep)
     return TelemetryBundle(
         hmu=_hmu_observe(bundle.hmu, block_ids,
-                         counter_max=f.hmu_counter_max),
+                         counter_max=f.hmu_counter_max, hist=hist),
         pebs=pebs,
-        nb=_nb_observe(bundle.nb, block_ids, stalled=stalled),
-        true_counts=_count_observe(bundle.true_counts, block_ids),
+        nb=_nb_observe(bundle.nb, block_ids, stalled=stalled,
+                       touched=touched),
+        true_counts=_count_observe(bundle.true_counts, block_ids,
+                                   hist=hist),
         faults=dataclasses.replace(
             f, key=key,
             pebs_dropped=counter_add(f.pebs_dropped, n_dropped),
@@ -456,8 +515,9 @@ def _bundle_resets(bundle: TelemetryBundle) -> TelemetryBundle:
 TRACE_COUNTS = {"observe_all": 0}
 
 
-@partial(jax.jit, donate_argnums=0)
-def observe_all(bundle: TelemetryBundle, batches: jax.Array) -> TelemetryBundle:
+@partial(jax.jit, donate_argnums=0, static_argnames=("pallas",))
+def observe_all(bundle: TelemetryBundle, batches: jax.Array,
+                pallas=None) -> TelemetryBundle:
     """Observe a whole epoch in one dispatch.
 
     ``batches`` is the epoch's access stream as ``(n_batches, batch_size)``
@@ -477,13 +537,18 @@ def observe_all(bundle: TelemetryBundle, batches: jax.Array) -> TelemetryBundle:
     in place, and — because the call is async-dispatched — the host is
     already free to flush the previous epochs' batched record sync
     (``EpochRuntime`` with ``sync_every=K``) while the scan runs.
+
+    ``pallas`` (a static ``repro.kernels.dispatch.PallasBackend``) swaps
+    the per-collector scatters inside the scan for ONE ``observe_scatter``
+    kernel pass per batch — one read of the id stream feeding all four
+    collector updates — still a single dispatch, bit-identical states.
     """
     TRACE_COUNTS["observe_all"] += 1
     if bundle.faults is not None:
         bundle = _bundle_resets(bundle)
 
     def step(b: TelemetryBundle, block_ids: jax.Array):
-        return _bundle_observe(b, block_ids), None
+        return _bundle_observe(b, block_ids, pallas=pallas), None
 
     out, _ = jax.lax.scan(step, bundle, batches)
     return out

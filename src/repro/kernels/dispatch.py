@@ -1,0 +1,57 @@
+"""Shared Pallas dispatch policy for the telemetry kernels.
+
+Every kernel package in ``repro.kernels`` follows one triad — ``ref.py`` (the
+pure-jnp oracle), ``kernel.py`` (the Pallas TPU kernel), ``ops.py`` (a jit'd
+wrapper choosing between them) — and the *core* integration points
+(``selectk`` / ``telemetry`` / ``runtime``) all make the same choice the same
+way: a :class:`PallasBackend` (hashable, so it can ride in static jit config
+like ``runtime._FusedCfg``) when the kernels should run, ``None`` when the
+XLA path should.
+
+Resolution rule (:func:`resolve_backend`):
+
+* ``use_pallas=None`` (default) — kernels on iff the default JAX backend is
+  TPU: compiled Pallas is the point on real hardware, XLA is the oracle
+  elsewhere.
+* ``use_pallas=True`` off-TPU — the kernels still run, in ``interpret=True``
+  mode (Pallas's CPU interpreter), unless ``interpret`` is explicitly
+  ``False``.  This is the CI parity path: the kernel *bodies* execute and are
+  gated bit-identical against XLA on every push, even though the container
+  has no TPU.
+* ``use_pallas=False`` — XLA everywhere (the reference / bit-identity
+  oracle configuration).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+
+__all__ = ["PallasBackend", "resolve_backend"]
+
+
+class PallasBackend(NamedTuple):
+    """Static (hashable) kernel-dispatch config baked into jit traces.
+
+    ``interpret``       — run kernels through the Pallas interpreter (CPU
+                          parity mode) instead of compiling for TPU.
+    ``select_tile_n``   — hist_select: key elements per grid tile.
+    ``scatter_tile_m``  — observe_scatter: id-stream elements per grid tile.
+    """
+    interpret: bool = False
+    select_tile_n: int = 2048
+    scatter_tile_m: int = 1024
+
+
+def resolve_backend(use_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None,
+                    **overrides) -> Optional[PallasBackend]:
+    """``None`` = XLA path; a :class:`PallasBackend` = run the kernels."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if not use_pallas:
+        return None
+    if interpret is None:
+        interpret = not on_tpu
+    return PallasBackend(interpret=bool(interpret), **overrides)

@@ -1,0 +1,13 @@
+"""hist_select — one-pass radix-histogram threshold select (Pallas TPU).
+
+Replaces ``selectk``'s 32-round bitwise threshold search (one full
+compare+reduce pass over the keys per bit) with a 4-level byte radix descent:
+each level streams the keys once, building a 256-bin histogram of the
+current byte per segment in VMEM, then localizes the k-th largest key's bin
+from the cumulated histogram — 4 grid passes instead of 32, bit-identical
+thresholds.
+"""
+from .ops import MAX_N, kth_key_u
+from .ref import kth_key_u_ref
+
+__all__ = ["kth_key_u", "kth_key_u_ref", "MAX_N"]

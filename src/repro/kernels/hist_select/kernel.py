@@ -1,0 +1,148 @@
+"""hist_select — Pallas TPU radix-histogram threshold select.
+
+The paper's HMU must rank-select on-module in a bounded number of passes
+over its counter SRAM; ``selectk``'s bitwise search emulates that with 32
+full compare+reduce passes (one per bit).  This kernel descends the same
+threshold in 4 byte levels: per level it streams the key tiles once,
+accumulating a per-segment 256-bin histogram of the current byte (restricted
+to keys matching the already-resolved high-byte prefix) in VMEM, then — on
+the level's last tile — cumulates the histogram from the top to find the bin
+holding the k-th largest key, folds that byte into the prefix, and rebases k
+to the bin-local rank.  After level 3 the prefix IS the k-th largest key:
+the exact value ``selectk._kth_largest`` returns, in 4 grid passes over the
+data instead of 32.
+
+Layout per grid step ``(b, level, tile)`` (grid is sequential on a TPU core,
+so the VMEM scratch carries state across steps race-free):
+
+  * keys tile ``(1, tile_n)`` uint32 (the order-isomorphic ``_to_u`` image);
+  * segment-id tile ``(1, tile_n)`` int32 (-1 = padding, matches no segment);
+  * histogram scratch ``(S, 256)`` f32, accumulated via a segment-one-hot ×
+    byte-one-hot matmul — ``gather_count``'s one-hot tile pattern, MXU-shaped
+    on TPU; f32 accumulation is exact below 2**24 counts (``ops.MAX_N``);
+  * prefix / k-remaining scratch ``(S, 1)`` in VMEM (per-segment select
+    state), reset at ``(level==0, tile==0)`` per batch row.
+
+Per-segment caps ride in as a ``(S, 1)`` VMEM input — the "segment caps
+become per-tenant histogram offsets" form of ``segment_top_k_mask``: one
+kernel invocation resolves every tenant's threshold instead of one
+dispatch per tenant slice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_TILE_N = 2048
+_LEVELS = 4                       # 32-bit keys, one byte per level
+
+
+def _kernel(
+    keys_ref,        # (1, tile_n) uint32 key tile (u-domain)
+    seg_ref,         # (1, tile_n) int32 segment ids (-1 = padding)
+    ks_ref,          # (S, 1) int32 per-segment selection widths
+    out_ref,         # (1, S, 1) uint32 thresholds for this batch row
+    hist_ref,        # (S, 256) f32 scratch
+    prefix_ref,      # (S, 1) uint32 scratch: resolved high bytes
+    krem_ref,        # (S, 1) int32 scratch: rank within the current prefix
+    *,
+    n_segments: int,
+    n_tiles: int,
+    tile_n: int,
+):
+    level = pl.program_id(1)
+    tile = pl.program_id(2)
+    s = n_segments
+
+    @pl.when((level == 0) & (tile == 0))
+    def _init_row():
+        prefix_ref[...] = jnp.zeros((s, 1), jnp.uint32)
+        krem_ref[...] = ks_ref[...]
+
+    @pl.when(tile == 0)
+    def _zero_hist():
+        hist_ref[...] = jnp.zeros((s, 256), jnp.float32)
+
+    # ---- accumulate this tile's per-segment histogram of the level's byte
+    u = keys_ref[...]                                   # (1, tile_n) uint32
+    lvl = level.astype(jnp.uint32)
+    shift = jnp.uint32(8) * (jnp.uint32(3) - lvl)
+    byte = ((u >> shift) & jnp.uint32(0xFF)).astype(jnp.int32)
+    # keys still in the running match the resolved prefix on every byte
+    # above this level (level 0: mask 0, everything matches)
+    hi_mask = ~(jnp.uint32(0xFFFFFFFF) >> (jnp.uint32(8) * lvl))
+    matched = (u & hi_mask) == prefix_ref[...]          # (S, tile_n)
+    seg_oh = (seg_ref[...] ==
+              jax.lax.broadcasted_iota(jnp.int32, (s, tile_n), 0))
+    contrib = (seg_oh & matched).astype(jnp.float32)    # (S, tile_n)
+    byte_col = byte.reshape(tile_n, 1)
+    byte_oh = (byte_col ==
+               jax.lax.broadcasted_iota(jnp.int32, (tile_n, 256), 1)
+               ).astype(jnp.float32)
+    hist_ref[...] += jnp.dot(contrib, byte_oh,
+                             preferred_element_type=jnp.float32)
+
+    # ---- level boundary: localize the k-th key's bin, refine prefix and k
+    @pl.when(tile == n_tiles - 1)
+    def _resolve():
+        hist = hist_ref[...]                            # (S, 256)
+        cum = jnp.cumsum(hist, axis=1)                  # inclusive, from 0
+        total = cum[:, 255][:, None]
+        from_top = total - cum + hist                   # count(byte >= j)
+        krem = krem_ref[...].astype(jnp.float32)        # (S, 1)
+        # from_top is non-increasing in j: the chosen bin is the largest j
+        # with from_top[j] >= k, i.e. (number of qualifying bins) - 1.
+        # k == 0 qualifies every bin -> bin 255 -> prefix byte 0xFF, exactly
+        # the all-ones threshold the bitwise search degenerates to.
+        n_ge = jnp.sum((from_top >= krem).astype(jnp.float32), axis=1)
+        b_idx = jnp.maximum(n_ge - 1.0, 0.0)[:, None]   # (S, 1)
+        iota = jax.lax.broadcasted_iota(jnp.float32, (s, 256), 1)
+        oh = (iota == b_idx).astype(jnp.float32)
+        above = jnp.sum(oh * (from_top - hist), axis=1)[:, None]
+        krem_ref[...] = krem_ref[...] - above.astype(jnp.int32)
+        prefix_ref[...] = (prefix_ref[...]
+                           | (b_idx.astype(jnp.uint32) << shift))
+
+    @pl.when((level == _LEVELS - 1) & (tile == n_tiles - 1))
+    def _emit():
+        out_ref[0] = prefix_ref[...]
+
+
+def kth_key_u_pallas(
+    u: jax.Array,          # (B, n) uint32 keys, n % tile_n == 0
+    seg_ids: jax.Array,    # (n,) int32, -1 = padding
+    ks: jax.Array,         # (S,) int32 per-segment widths
+    *,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> jax.Array:            # (B, S) uint32 thresholds
+    b, n = u.shape
+    if n % tile_n:
+        raise ValueError(f"n={n} must be a multiple of tile_n={tile_n}")
+    s = ks.shape[0]
+    n_tiles = n // tile_n
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_segments=s, n_tiles=n_tiles,
+                          tile_n=tile_n),
+        grid=(b, _LEVELS, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, tile_n), lambda i, l, t: (i, t)),
+            pl.BlockSpec((1, tile_n), lambda i, l, t: (0, t)),
+            pl.BlockSpec((s, 1), lambda i, l, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, 1), lambda i, l, t: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, 1), jnp.uint32),
+        scratch_shapes=[
+            pltpu.VMEM((s, 256), jnp.float32),
+            pltpu.VMEM((s, 1), jnp.uint32),
+            pltpu.VMEM((s, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(u, seg_ids.reshape(1, n), ks.reshape(s, 1).astype(jnp.int32))
+    return out.reshape(b, s)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for hist_select.
+
+``kth_key_u_ref`` computes, per batch row and per segment, the k-th largest
+uint32 key among that segment's elements — the same value ``selectk``'s
+bitwise binary search (``_kth_largest``) converges to, by construction: the
+largest threshold ``t`` with ``count(u >= t) >= k`` over a set of integers is
+exactly the set's k-th largest element.  ``k == 0`` yields the all-ones
+threshold (no element compares ``>``, matching the 32-round search that sets
+every candidate bit when ``n_ge >= 0`` is vacuously true).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+_ALL_ONES = jnp.uint32(0xFFFFFFFF)
+
+
+def kth_key_u_ref(u: jax.Array, seg_ids: jax.Array,
+                  ks: Sequence[int]) -> jax.Array:
+    """(B, n) uint32 keys + (n,) int32 segment ids -> (B, S) uint32
+    thresholds: segment s's ``ks[s]``-th largest key per row.
+
+    ``seg_ids`` entries outside [0, S) (padding convention: -1) belong to no
+    segment.  Requires ``0 <= ks[s] <= |segment s|`` — the callers clamp.
+    """
+    b = u.shape[0]
+    outs = []
+    for s, k in enumerate(ks):
+        member = (seg_ids == s)[None, :]
+        if int(k) == 0:
+            outs.append(jnp.full((b,), _ALL_ONES, jnp.uint32))
+            continue
+        # non-members sink to 0, the uint32 minimum: with k <= |segment|
+        # the k-th largest member is never displaced by them (a displaced
+        # threshold would require fewer than k members >= it)
+        uu = jnp.where(member, u, jnp.uint32(0))
+        outs.append(jnp.sort(uu, axis=-1)[:, -int(k)])
+    return jnp.stack(outs, axis=-1)

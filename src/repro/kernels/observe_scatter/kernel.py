@@ -1,0 +1,109 @@
+"""observe_scatter — Pallas TPU fused telemetry scatter.
+
+``gather_count``'s counter-bump pattern, widened from one counter array to
+the two histograms the whole telemetry bundle needs: the grid walks
+``tile_m``-id tiles of the batch's scalar-prefetched id stream (the same
+SMEM-resident index idiom — the core must know the ids to address the
+counter cells), carrying both histograms in VMEM across the sequential grid
+(zeroed at step 0, revisited every step, race-free on a TPU core).  Per id
+the kernel bumps the access histogram and — when the id's stream position
+hits the PEBS sampler's ``(cursor + position) % period == 0`` phase, and
+survives the optional fault-model keep mask — the sampled histogram.  One
+read of the id stream feeds HMU, PEBS, NB and the true counter; the XLA
+path reads it four times (one scatter per collector).
+
+Id semantics exactly match the XLA observe path's ``.at[ids].add(...,
+mode="drop")``: a negative id wraps once (NumPy-style ``id + n_blocks``)
+and anything still outside ``[0, n_blocks)`` is skipped.  The ops wrapper
+pads ragged tiles with ``n_blocks`` — out of range for BOTH paths, so
+phantom positions never touch either histogram.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_TILE_M = 1024
+
+
+def _kernel(*refs, tile_m: int, period: int, n_blocks: int, has_keep: bool):
+    if has_keep:
+        idx_ref, keep_ref, cursor_ref, hist_ref, pebs_ref = refs
+    else:
+        idx_ref, cursor_ref, hist_ref, pebs_ref = refs
+        keep_ref = None
+    step = pl.program_id(0)
+    base = step * tile_m
+
+    @pl.when(step == 0)
+    def _zero():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+        pebs_ref[...] = jnp.zeros_like(pebs_ref)
+
+    cursor = cursor_ref[0]
+
+    def bump(i, _):
+        raw = idx_ref[base + i]
+        blk = jnp.where(raw < 0, raw + n_blocks, raw)
+        hit = ((cursor + base + i) % period) == 0
+        if keep_ref is not None:
+            hit = hit & (keep_ref[base + i] != 0)
+
+        @pl.when((blk >= 0) & (blk < n_blocks))
+        def _():
+            hist_ref[blk, 0] = hist_ref[blk, 0] + 1
+
+            @pl.when(hit)
+            def _():
+                pebs_ref[blk, 0] = pebs_ref[blk, 0] + 1
+
+        return ()
+
+    jax.lax.fori_loop(0, tile_m, bump, (), unroll=False)
+
+
+def observe_scatter_pallas(
+    ids: jax.Array,        # (M,) int32, M % tile_m == 0 (n_blocks = padding)
+    cursor: jax.Array,     # () or (1,) int32
+    *,
+    n_blocks: int,
+    period: int,
+    keep: jax.Array | None = None,   # (M,) int32/bool per-event survival
+    tile_m: int = DEFAULT_TILE_M,
+    interpret: bool = False,
+):
+    m = ids.shape[0]
+    if m % tile_m:
+        raise ValueError(f"M={m} must be a multiple of tile_m={tile_m}")
+    has_keep = keep is not None
+
+    operands = [ids.astype(jnp.int32)]
+    if has_keep:
+        operands.append(keep.astype(jnp.int32))
+    operands.append(cursor.reshape(1).astype(jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(operands),
+        grid=(m // tile_m,),
+        in_specs=[],
+        out_specs=[
+            pl.BlockSpec((n_blocks, 1), lambda i, *_: (0, 0)),
+            pl.BlockSpec((n_blocks, 1), lambda i, *_: (0, 0)),
+        ],
+    )
+    hist, pebs_hist = pl.pallas_call(
+        functools.partial(_kernel, tile_m=tile_m, period=period,
+                          n_blocks=n_blocks, has_keep=has_keep),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return hist.reshape(n_blocks), pebs_hist.reshape(n_blocks)

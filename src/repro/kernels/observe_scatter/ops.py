@@ -1,0 +1,59 @@
+"""jit'd public wrapper for observe_scatter.
+
+Dispatches to the Pallas TPU kernel on TPU backends (or in interpret mode
+for CPU parity runs) and to the pure-jnp reference elsewhere.  Pads the id
+stream to the tile size with ``n_blocks`` — out of range for both paths
+(negative ids WRAP once, NumPy-style, so they cannot pad) — so callers
+pass arbitrary batch sizes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_TILE_M, observe_scatter_pallas
+from .ref import observe_scatter_ref
+
+# both histograms ride whole in VMEM across the grid; past ~1M blocks they
+# stop fitting alongside the working tiles — callers fall back to XLA
+MAX_BLOCKS = 1 << 20
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit,
+         static_argnames=("n_blocks", "period", "tile_m", "use_pallas",
+                          "interpret"))
+def observe_scatter(
+    ids: jax.Array,                # (M,) int32 block ids
+    cursor: jax.Array,             # () int32 PEBS position mod period
+    *,
+    n_blocks: int,
+    period: int,
+    keep: jax.Array | None = None,  # (M,) bool fault-model survival mask
+    tile_m: int = DEFAULT_TILE_M,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """Fused epoch-batch telemetry scatter -> (hist, pebs_hist)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas or n_blocks > MAX_BLOCKS:
+        return observe_scatter_ref(ids, cursor, n_blocks=n_blocks,
+                                   period=period, keep=keep)
+    m = ids.shape[0]
+    tile = min(tile_m, -(-m // 128) * 128)
+    pad = (-m) % tile
+    if pad:
+        ids = jnp.concatenate(
+            [ids, jnp.full((pad,), n_blocks, jnp.int32)])
+        if keep is not None:
+            keep = jnp.concatenate(
+                [keep, jnp.zeros((pad,), keep.dtype)])
+    return observe_scatter_pallas(ids, cursor, n_blocks=n_blocks,
+                                  period=period, keep=keep, tile_m=tile,
+                                  interpret=interpret)

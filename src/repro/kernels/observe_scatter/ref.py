@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for observe_scatter.
+
+Exactly the scatter-adds ``telemetry._bundle_observe`` issues per batch,
+reduced to their two independent histograms.  ``mode="drop"`` semantics —
+a negative id wraps once (NumPy-style) and anything still outside
+``[0, n_blocks)`` is dropped — matching both the XLA observe path and the
+kernel's wrap + bounds guard.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def observe_scatter_ref(
+    ids: jax.Array,                 # (M,) int32 block ids
+    cursor: jax.Array,              # () int32 PEBS stream position mod period
+    *,
+    n_blocks: int,
+    period: int,
+    keep: Optional[jax.Array] = None,   # (M,) bool per-event survival
+) -> Tuple[jax.Array, jax.Array]:
+    """-> (hist, pebs_hist): (n_blocks,) int32 access and sampled counts."""
+    flat = ids.reshape(-1)
+    hist = jnp.zeros((n_blocks,), jnp.int32).at[flat].add(1, mode="drop")
+    pos = cursor + jnp.arange(flat.shape[0], dtype=jnp.int32)
+    kept = (pos % period) == 0
+    if keep is not None:
+        kept = kept & keep
+    pebs_hist = jnp.zeros((n_blocks,), jnp.int32).at[flat].add(
+        kept.astype(jnp.int32), mode="drop")
+    return hist, pebs_hist

@@ -32,6 +32,43 @@ def test_gather_count_matches_ref(n, d, m, block_rows, dtype):
     np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_r))
 
 
+@pytest.mark.parametrize("m,tile_m", [
+    (1, 128),       # a single lookup: the tile is almost all padding
+    (129, 128),     # one element past a tile boundary
+    (127, 128),     # one element short of a tile
+])
+def test_gather_count_ragged_tiles_pad_correction(m, tile_m):
+    """The wrapper pads ragged index tails with row 0 and subtracts the
+    phantom counts afterwards — block 0's counter must come out exact even
+    when padding dominates the final tile."""
+    rng = np.random.default_rng(7)
+    storage = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 64, m), jnp.int32)
+    counts = jnp.full((8,), 5, jnp.int32)        # non-zero carry-in
+    out_p, c_p = gather_count(storage, idx, counts, block_rows=8,
+                              use_pallas=True, interpret=True, tile_m=tile_m)
+    out_r, c_r = gather_count_ref(storage, idx, counts, block_rows=8)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r))
+    np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_r))
+    assert out_p.shape == (m, 128)
+
+
+def test_embedding_bag_ragged_bag_grid():
+    """Bag grid that is no multiple of anything tile-ish (B=3, L=5) — the
+    kernel's per-bag loop must not depend on round shapes."""
+    rng = np.random.default_rng(8)
+    storage = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 128, (3, 5)), jnp.int32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, (3, 5)), jnp.float32)
+    counts = jnp.zeros((16,), jnp.int32)
+    out_p, c_p = embedding_bag(storage, idx, counts, w, block_rows=8,
+                               use_pallas=True, interpret=True)
+    out_r, c_r = embedding_bag_ref(storage, idx, w, counts, block_rows=8)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_r))
+
+
 def test_gather_count_accumulates_over_calls():
     storage = jnp.zeros((64, 128), jnp.float32)
     counts = jnp.zeros((8,), jnp.int32)
