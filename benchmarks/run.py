@@ -28,7 +28,15 @@ the paper reports for that artifact).
                      records/s, dropped counts) gated on zero added
                      dispatches, bit-identical records, schema validation,
                      dead-sink circuit-breaker degradation, and a
-                     tracemalloc peak-memory budget
+                     tracemalloc peak-memory budget.
+                     --obs adds the self-observability bench into
+                     results/BENCH_obs.json (span tracing + metrics
+                     registry + runtime_span/metric export, all on) gated
+                     on zero added dispatches, bit-identical records and
+                     tenant rows, exact span accounting, a chrome trace
+                     artifact (results/trace_obs.json) in which record_sync
+                     visibly overlaps the next epoch's observe_all, and a
+                     zero-allocation disabled mode
   telemetry_sweep  — §V coverage-vs-overhead: PEBS period / NB scan sweeps
   kernel_micro     — gather_count / embedding_bag / flash_attention
                      wall-time on CPU oracle path (correctness-scale) +
@@ -42,7 +50,6 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
@@ -54,22 +61,29 @@ def _row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
+def _now() -> float:
+    """Monotonic seconds from the ``repro.obs`` injectable clock — the one
+    audited timing path, shared with span tracing, so bench rows and trace
+    timelines agree (imported lazily so ``--help`` stays repro-free)."""
+    from repro.obs.trace import now_s
+    return now_s()
+
+
 def _elapsed(t0: float, *sync) -> float:
-    """Seconds since ``t0`` (a ``time.perf_counter()`` stamp), stopping the
-    clock only after blocking on any in-flight device values.  Under JAX
-    async dispatch a timer read before ``block_until_ready`` excludes
-    whatever the device is still running — wall times would be fiction once
-    the runtime stops syncing every epoch."""
-    import jax
-    for v in sync:
-        jax.block_until_ready(v)
-    return time.perf_counter() - t0
+    """Seconds since ``t0`` (a ``_now()`` stamp), stopping the clock only
+    after blocking on any in-flight device values.  Under JAX async
+    dispatch a timer read before ``block_until_ready`` excludes whatever
+    the device is still running — wall times would be fiction once the
+    runtime stops syncing every epoch.  Delegates to
+    ``repro.obs.trace.elapsed_s`` (same injectable clock as spans)."""
+    from repro.obs.trace import elapsed_s
+    return elapsed_s(t0, *sync)
 
 
 # ====================================================================== fig3
 def fig3_mmap():
     from repro.dlrm import tracesim
-    t0 = time.perf_counter()
+    t0 = _now()
     out = tracesim.run_fig3()
     us = _elapsed(t0, out) * 1e6
     m = out["methods"]
@@ -89,7 +103,7 @@ def fig3_mmap():
 # ==================================================================== table1
 def table1_dlrm():
     from repro.dlrm import tracesim
-    t0 = time.perf_counter()
+    t0 = _now()
     rows = tracesim.run_table1()
     us = _elapsed(t0, rows) * 1e6
     for name, paper in (("hmu", "65454us 486587pg 1.85GB"),
@@ -109,7 +123,8 @@ def table1_dlrm():
 # ============================================================= epoch runtime
 def epoch_runtime(json_mode: bool = False, scale: str = "full",
                   scenarios=None, faults: bool = False,
-                  export: bool = False, kernels: bool = False):
+                  export: bool = False, kernels: bool = False,
+                  obs: bool = False):
     """Online multi-epoch tiering: fused observe_all + per-epoch migration.
     Emits the full per-epoch trajectory as JSON (the time-series artifact).
 
@@ -127,7 +142,7 @@ def epoch_runtime(json_mode: bool = False, scale: str = "full",
     import json
     from repro.dlrm import tracesim
 
-    t0 = time.perf_counter()
+    t0 = _now()
     out = tracesim.run_online(n_epochs=10, shift_at=5, hints=True)
     us = _elapsed(t0, out) * 1e6
     dest = Path("results")
@@ -153,6 +168,8 @@ def epoch_runtime(json_mode: bool = False, scale: str = "full",
             _bench_faults(dest, scale)
         if export:
             _bench_export(dest, scale)
+        if obs:
+            _bench_obs(dest, scale)
         if kernels:
             _bench_kernels(dest, scale)
 
@@ -233,7 +250,7 @@ def _bench_scenarios(scale: str, names) -> tuple:
         eps = list(scen.epochs())
         runner(hints=True, epochs=eps)
         with rtmod.counting() as counts:
-            t0 = time.perf_counter()
+            t0 = _now()
             fused = runner(hints=True, epochs=eps)
             wall = _elapsed(t0, fused)
             d = counts.dispatch
@@ -356,7 +373,7 @@ def _bench_epoch_runtime(dest: Path, scale: str, scenarios):
             eps = list(epochs(n_epochs, seed=rnd))   # data-gen outside timer
             for mode, rt in runtimes.items():
                 with rtmod.counting() as counts:
-                    t0 = time.perf_counter()
+                    t0 = _now()
                     rt.run(eps)
                     best[mode] = min(best[mode],
                                      _elapsed(t0, rt.block_until_ready()))
@@ -476,7 +493,7 @@ def _bench_faults(dest: Path, scale: str):
     def run(**kw):
         rt = runtime(**kw)
         with rtmod.counting() as c:
-            t0 = time.perf_counter()
+            t0 = _now()
             rt.run(iter(eps))
             wall = _elapsed(t0, rt.block_until_ready())
             disp = (c.dispatch["observe_all"]
@@ -632,7 +649,7 @@ def _bench_export(dest: Path, scale: str):
                           nb_scan_rate=n // 4, fused=True,
                           sync_every=sync_every, export=export)
         with rtmod.counting() as c:
-            t0 = time.perf_counter()
+            t0 = _now()
             rt.run(iter(eps))
             wall = _elapsed(t0, rt.block_until_ready())
             disp = dict(c.dispatch)
@@ -648,10 +665,10 @@ def _bench_export(dest: Path, scale: str):
 
     sink = MemorySink()
     client = ExportClient(sink, queue_size=8192, flush_interval_s=0.005)
-    t_on0 = time.perf_counter()
+    t_on0 = _now()
     on_rt, wall_on, disp_on = run(export=client)
     client.flush(timeout=60)
-    drain_wall = time.perf_counter() - t_on0
+    drain_wall = _now() - t_on0
     st = client.stats()
     client.close()
 
@@ -767,6 +784,225 @@ def _bench_export(dest: Path, scale: str):
         raise SystemExit(1)
 
 
+def _bench_obs(dest: Path, scale: str):
+    """Self-observability bench -> BENCH_obs.json + a Chrome trace artifact.
+
+    repro.obs watches the runtime; this bench proves the watching costs the
+    watched system nothing, with the same structural (not wall-clock)
+    discipline as the faults/export benches:
+
+      1. zero added dispatches — obs-on (span tracing + metrics registry +
+         runtime_span/runtime_metric export, all live) dispatch counts
+         equal obs-off exactly; epoch stays 2 dispatches, <=1 trace;
+      2. bit-identical records, per-tenant rows, and final placements
+         obs-on vs obs-off (the run uses tenant quotas so tenant
+         accounting is inside the gate);
+      3. span accounting is exact, not sampled: one observe_all + one
+         epoch_step span per epoch, exactly ceil(n_epochs/sync_every)
+         record_sync spans;
+      4. pipelining is *visible*: with sync_every=K>1 some record_sync
+         span must begin after the host has already dispatched the next
+         epoch's observe_all (guaranteed by _step_fused's code order) —
+         the same proof rendered into the chrome://tracing artifact
+         (trace_obs.json) with a synthesized device track;
+      5. everything exported — epoch/tenant records, runtime spans, the
+         registry dump — validates against the frozen schema with zero
+         drops on the healthy sink;
+      6. disabled mode is actually free: every span() call on the
+         NullTracer returns the same singleton object, and a
+         tracemalloc-watched hot loop of guarded span sites allocates
+         nothing.
+
+    Wall-time rows (obs-on vs obs-off epoch time) are informational — the
+    single-core CI host shares with the XLA backend, so only structure is
+    gated.
+    """
+    import json
+    import tracemalloc
+    from repro.core import runtime as rtmod
+    from repro.core.runtime import EpochRuntime, Tenancy
+    from repro.export import ExportClient, MemorySink, validate_record
+    from repro.obs import chrometrace, metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
+    smoke = scale == "smoke"
+    n = 2_000 if smoke else 20_000
+    k = n // 10
+    n_epochs = 6 if smoke else 10
+    shape = (2, 8_000) if smoke else (4, 20_000)
+    sync_every = 3
+    policies = ("hmu_oracle", "hinted", "nb_two_touch")
+    ten = Tenancy(offsets=(0, n // 3, n), hot_k=(k // 4, k // 4),
+                  caps=(k // 4, k // 2))
+
+    rng = np.random.default_rng(31)
+    eps = [(rng.zipf(1.3, size=shape) % n).astype(np.int32)
+           for _ in range(n_epochs)]
+
+    def run(export=None):
+        rt = EpochRuntime(n, k, policies=policies,
+                          pebs_period=max(shape[0] * shape[1] // (4 * k), 1),
+                          nb_scan_rate=n // 4, fused=True,
+                          sync_every=sync_every, tenancy=ten, export=export)
+        with rtmod.counting() as c:
+            t0 = _now()
+            rt.run(iter(eps))
+            wall = _elapsed(t0, rt.block_until_ready())
+            disp = dict(c.dispatch)
+            traces = c.trace["epoch_step"]
+        return rt, wall, disp, traces
+
+    report = {"scale": scale, "n_blocks": n, "k_hot": k,
+              "n_epochs": n_epochs, "sync_every": sync_every,
+              "gates": {}}
+    ok = True
+
+    run()                     # warmup: jit compile outside the timed rows
+    obs_trace.disable()
+    off_rt, wall_off, disp_off, traces_off = run()
+
+    # obs-on: tracing + registry-mirrored span histograms + full export
+    registry = obs_metrics.MetricsRegistry()
+    sink = MemorySink()
+    client = ExportClient(sink, queue_size=16384, flush_interval_s=0.005)
+    tracer = obs_trace.enable(metrics=registry)
+    try:
+        on_rt, wall_on, disp_on, traces_on = run(export=client)
+    finally:
+        obs_trace.disable()
+    for span in tracer.spans:
+        client.export_runtime_span(span)
+    client.export_metrics(registry)
+    client.flush(timeout=60)
+    st = client.stats()
+    client.close()
+
+    # gate 1: zero added dispatches, 2-dispatch epoch, <=1 trace
+    per_epoch = (disp_on["observe_all"] + disp_on["epoch_step"]) / n_epochs
+    gate1 = (disp_on == disp_off and per_epoch == 2
+             and traces_on <= 1 and traces_off <= 1)
+    report["gates"]["zero_added_dispatches"] = gate1
+    ok &= gate1
+
+    # gate 2: bit-identical records + tenant rows + placements
+    identical = all(
+        [a.to_dict() for a in off_rt.records[lane]]
+        == [b.to_dict() for b in on_rt.records[lane]]
+        and np.array_equal(off_rt.lanes[lane].slot_to_block,
+                           on_rt.lanes[lane].slot_to_block)
+        for lane in policies)
+    identical &= len(off_rt.tenant_records) == len(on_rt.tenant_records)
+    identical &= all(
+        set(a) == set(b) and all(np.array_equal(a[key], b[key]) for key in a)
+        for a, b in zip(off_rt.tenant_records, on_rt.tenant_records))
+    report["gates"]["bit_identical_records"] = identical
+    ok &= identical
+
+    # gate 3: exact span accounting (per name, host track)
+    by_name = {}
+    for s in tracer.spans:
+        by_name[s.name] = by_name.get(s.name, 0) + 1
+    n_syncs = -(-n_epochs // sync_every)
+    span_ok = (by_name.get("observe_all") == n_epochs
+               and by_name.get("epoch_step") == n_epochs
+               and by_name.get("record_sync") == n_syncs
+               and tracer.dropped_spans == 0)
+    report["span_counts"] = by_name
+    report["gates"]["exact_span_accounting"] = span_ok
+    ok &= span_ok
+
+    # gate 4: pipelining visible + chrome trace artifact with device track
+    visible = chrometrace.pipelining_visible(tracer.spans)
+    trace_path = dest / ("trace_obs.json" if scale == "full"
+                         else "trace_obs.smoke.json")
+    doc = chrometrace.write_chrome_trace(
+        trace_path, tracer.spans,
+        metadata={"bench": "obs", "scale": scale,
+                  "sync_every": sync_every, "n_epochs": n_epochs})
+    has_device_track = any(e["tid"] == "device" for e in doc["traceEvents"])
+    report["gates"]["pipelining_visible"] = visible
+    report["gates"]["device_track_in_trace"] = has_device_track
+    ok &= visible and has_device_track
+
+    # gate 5: everything exported validates, zero drops on the healthy sink
+    recs = sink.snapshot()
+    valid = True
+    for rec in recs:
+        try:
+            validate_record(rec)
+        except Exception:
+            valid = False
+            break
+    kinds = {}
+    for rec in recs:
+        kinds[rec["record_type"]] = kinds.get(rec["record_type"], 0) + 1
+    complete = (st["exported"] == len(recs)
+                and kinds.get("epoch", 0) == n_epochs * len(policies)
+                and kinds.get("runtime_span", 0) == len(tracer.spans)
+                and kinds.get("runtime_metric", 0) > 0
+                and st["dropped_queue_full"] == 0
+                and st["dropped_invalid"] == 0
+                and st["sink_failures"] == 0)
+    report["record_counts"] = kinds
+    report["gates"]["all_records_validate"] = valid
+    report["gates"]["no_drops_on_healthy_sink"] = complete
+    ok &= valid and complete
+
+    # gate 6: disabled mode — singleton no-op span, zero-allocation loop
+    null = obs_trace.get_tracer()
+    singleton = (null.span("observe_all") is null.span("epoch_step")
+                 is obs_trace.NOOP_SPAN and not null.enabled)
+
+    def guarded_loop(tracer, iters):
+        # the runtime's hot-path guard pattern verbatim; a function so its
+        # locals (incl. the loop counter int) die before the measurement
+        for step in range(iters):
+            cm = (tracer.span("observe_all", epoch=step) if tracer.enabled
+                  else obs_trace.NOOP_SPAN)
+            with cm:
+                pass
+
+    guarded_loop(null, 512)       # warm any lazy interning before measuring
+    tracemalloc.start()
+    try:
+        base = tracemalloc.get_traced_memory()[0]
+        guarded_loop(null, 4096)
+        grown = tracemalloc.get_traced_memory()[0] - base
+    finally:
+        tracemalloc.stop()
+    disabled_ok = singleton and grown == 0
+    report["disabled_loop_alloc_bytes"] = grown
+    report["gates"]["disabled_mode_zero_alloc"] = disabled_ok
+    ok &= disabled_ok
+
+    report.update({
+        "obs_off": {"wall_s": wall_off, "dispatches": disp_off},
+        "obs_on": {"wall_s": wall_on, "dispatches": disp_on,
+                   "spans": len(tracer.spans),
+                   "records_exported": st["exported"]},
+        "trace_artifact": str(trace_path),
+    })
+    _row("obs_off", wall_off / n_epochs * 1e6,
+         f"epoch={wall_off / n_epochs * 1e6:.0f}us tracer disabled")
+    _row("obs_on", wall_on / n_epochs * 1e6,
+         f"epoch={wall_on / n_epochs * 1e6:.0f}us spans={len(tracer.spans)} "
+         f"exported={st['exported']} pipelining_visible={visible}")
+    _row("obs_disabled_loop", 0.0,
+         f"alloc={grown}B/4096 spans singleton={singleton}")
+    _row("obs_trace_artifact", 0.0, str(trace_path))
+
+    out_path = dest / ("BENCH_obs.json" if scale == "full"
+                       else "bench_obs.smoke.json")
+    out_path.write_text(json.dumps(report, indent=1))
+    _row("obs_bench_artifact", 0.0, str(out_path))
+    if not ok:
+        print("FAIL: obs gate broke — added dispatches, bit-identity, span "
+              "accounting, pipelining visibility, schema validation, or "
+              f"disabled-mode allocation (gates={report['gates']})",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
 def _bench_kernels(dest: Path, scale: str):
     """Pallas telemetry-kernel bench -> BENCH_kernels.json.
 
@@ -829,12 +1065,12 @@ def _bench_kernels(dest: Path, scale: str):
         key = jnp.asarray(
             rng.integers(0, 2**30, size=(B, n), dtype=np.int32))
         v0, i0, m0 = selectk.select_top_k(key, k, return_mask=True)
-        t0 = time.perf_counter()
+        t0 = _now()
         v1, i1, m1 = selectk.select_top_k(key, k, return_mask=True)
         xla_s = _elapsed(t0, v1, i1, m1)
         vp, ip, mp = selectk.select_top_k(key, k, return_mask=True,
                                           backend=backend)
-        t0 = time.perf_counter()
+        t0 = _now()
         vp, ip, mp = selectk.select_top_k(key, k, return_mask=True,
                                           backend=backend)
         pal_s = _elapsed(t0, vp, ip, mp)
@@ -874,10 +1110,10 @@ def _bench_kernels(dest: Path, scale: str):
                                      use_pallas=True, interpret=True, **args)
             point_ok &= bool(jnp.array_equal(h0, h1))
             point_ok &= bool(jnp.array_equal(p0, p1))
-        t0 = time.perf_counter()
+        t0 = _now()
         hx, px = observe_scatter(ids, cursor, use_pallas=False, **args)
         xla_s = _elapsed(t0, hx, px)
-        t0 = time.perf_counter()
+        t0 = _now()
         hp, pp = observe_scatter(ids, cursor, tile_m=backend.scatter_tile_m,
                                  use_pallas=True, interpret=True, **args)
         pal_s = _elapsed(t0, hp, pp)
@@ -909,7 +1145,7 @@ def _bench_kernels(dest: Path, scale: str):
                           use_pallas=use_pallas,
                           pallas_interpret=use_pallas or None, **kw)
         with rtmod.counting() as c:
-            t0 = time.perf_counter()
+            t0 = _now()
             rt.run(iter(eps))
             wall = _elapsed(t0, rt.block_until_ready())
             disp = (c.dispatch["observe_all"]
@@ -966,7 +1202,7 @@ def telemetry_sweep():
                                lookups_per_batch=400_000)
     k = 48_000
     for period in (101, 1009, 10007, 100003):
-        t0 = time.perf_counter()
+        t0 = _now()
         mgr = TieringManager(spec.n_pages, k, pebs_period=period)
         s = datagen.ZipfPageSampler(spec, 0)
         for _ in range(10):
@@ -1005,7 +1241,7 @@ def kernel_micro():
 
     f = jax.jit(lambda s, i, c: gather_count(s, i, c, block_rows=8))
     f(storage, idx, counts)[0].block_until_ready()
-    t0 = time.perf_counter()
+    t0 = _now()
     for _ in range(20):
         out, counts = f(storage, idx, counts)
     _row("kernel_gather_count_8k_lookups",
@@ -1016,7 +1252,7 @@ def kernel_micro():
     counts2 = jnp.zeros((8192,), jnp.int32)
     g = jax.jit(lambda s, i, c: embedding_bag(s, i, c, block_rows=8))
     g(storage, bag_idx, counts2)[0].block_until_ready()
-    t0 = time.perf_counter()
+    t0 = _now()
     for _ in range(20):
         out2, counts2 = g(storage, bag_idx, counts2)
     _row("kernel_embedding_bag_512x32",
@@ -1026,7 +1262,7 @@ def kernel_micro():
     q = jnp.asarray(rng.normal(size=(8, 1024, 128)) * 0.3, jnp.bfloat16)
     h = jax.jit(lambda q: flash_attention(q, q, q, q_per_kv=1))
     h(q).block_until_ready()
-    t0 = time.perf_counter()
+    t0 = _now()
     for _ in range(5):
         o = h(q)
     _row("kernel_flash_attention_8x1024", _elapsed(t0, o) / 5 * 1e6,
@@ -1090,6 +1326,15 @@ def main() -> None:
                          "bit-identical records + schema validation + "
                          "dead-sink degradation + tracemalloc budget, "
                          "write results/BENCH_export.json")
+    ap.add_argument("--obs", action="store_true",
+                    help="epoch_runtime --json: bench runtime "
+                         "self-observability (span tracing + metrics "
+                         "registry + runtime_span/metric export), gate "
+                         "zero added dispatches + bit-identical records/"
+                         "tenant rows + exact span accounting + visible "
+                         "record-sync/observe overlap (chrome trace "
+                         "artifact) + zero-alloc disabled mode, write "
+                         "results/BENCH_obs.json")
     args = ap.parse_args()
     if args.scenarios and not args.json:
         ap.error("--scenario gates run inside the --json bench; "
@@ -1103,6 +1348,9 @@ def main() -> None:
     if args.kernels and not args.json:
         ap.error("--kernels gates run inside the --json bench; "
                  "add --json (or drop --kernels)")
+    if args.obs and not args.json:
+        ap.error("--obs gates run inside the --json bench; "
+                 "add --json (or drop --obs)")
     print("name,us_per_call,derived")
     for name, fn in ALL.items():
         if args.only and name != args.only:
@@ -1110,7 +1358,7 @@ def main() -> None:
         if name == "epoch_runtime":
             fn(json_mode=args.json, scale=args.scale,
                scenarios=args.scenarios, faults=args.faults,
-               export=args.export, kernels=args.kernels)
+               export=args.export, kernels=args.kernels, obs=args.obs)
         else:
             fn()
 

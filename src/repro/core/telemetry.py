@@ -65,6 +65,7 @@ from ..faults.model import (
     counter_add, counter_init, counter_scaled_add, counter_zero_like,
 )
 from ..kernels.observe_scatter import observe_scatter
+from ..obs import metrics as obs_metrics
 
 __all__ = [
     "HMUState", "PEBSState", "NBState", "TelemetryBundle",
@@ -511,8 +512,14 @@ def _bundle_resets(bundle: TelemetryBundle) -> TelemetryBundle:
 
 # Python-side trace counter: observe_all's body runs once per (shape, static)
 # combination; tests use this to prove the fused path compiles once and then
-# issues exactly one dispatch per epoch.
-TRACE_COUNTS = {"observe_all": 0}
+# issues exactly one dispatch per epoch.  A CounterDict view over the same
+# repro_trace_total registry family core.runtime uses (kind="observe_all"),
+# keeping the historical dict API.
+TRACE_COUNTS = obs_metrics.CounterDict(
+    obs_metrics.REGISTRY.counter(
+        "repro_trace_total",
+        help="XLA (re)traces of the fused epoch step / observe_all"),
+    "kind", keys=("observe_all",))
 
 
 @partial(jax.jit, donate_argnums=0, static_argnames=("pallas",))

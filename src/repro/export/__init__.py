@@ -27,7 +27,8 @@ See ``docs/telemetry_schema.md`` for the frozen field/type/units table.
 from .client import CircuitBreaker, ExportClient, NoopClient
 from .schema import (SCHEMA_PATH, SCHEMA_VERSION, SchemaError, load_schema,
                      validate_record, epoch_record_wire, tenant_record_wire,
-                     lane_summary_wire, tenant_lane_summary_wire)
+                     lane_summary_wire, tenant_lane_summary_wire,
+                     runtime_span_wire, runtime_metric_wire)
 from .sinks import JsonlSink, MemorySink, PrometheusTextSink, SinkError
 
 __all__ = [
@@ -35,5 +36,6 @@ __all__ = [
     "SCHEMA_PATH", "SCHEMA_VERSION", "SchemaError", "load_schema",
     "validate_record", "epoch_record_wire", "tenant_record_wire",
     "lane_summary_wire", "tenant_lane_summary_wire",
+    "runtime_span_wire", "runtime_metric_wire",
     "JsonlSink", "MemorySink", "PrometheusTextSink", "SinkError",
 ]

@@ -32,7 +32,9 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+from ..obs import trace as obs_trace
 from .schema import (SchemaError, epoch_record_wire, lane_summary_wire,
+                     runtime_metric_wire, runtime_span_wire,
                      tenant_lane_summary_wire, tenant_record_wire,
                      validate_record)
 
@@ -128,6 +130,16 @@ class NoopClient:
                                    summary: dict) -> bool:
         return False
 
+    def export_runtime_span(self, span) -> bool:
+        return False
+
+    def export_runtime_metric(self, metric: str, kind: str, value=None,
+                              **kw) -> bool:
+        return False
+
+    def export_metrics(self, registry) -> int:
+        return 0
+
     def bind(self, **labels: str) -> "NoopClient":
         return self
 
@@ -202,6 +214,13 @@ class ExportClient:
     def emit(self, record: dict) -> bool:
         """Enqueue one wire record.  Never blocks, never raises; returns
         whether the record was accepted."""
+        _tr = obs_trace.get_tracer()
+        if not _tr.enabled:
+            return self._emit(record)
+        with _tr.span("export.enqueue"):
+            return self._emit(record)
+
+    def _emit(self, record: dict) -> bool:
         if self._degraded or self._closed:
             with self._lock:
                 self._dropped_degraded += 1
@@ -236,6 +255,37 @@ class ExportClient:
                                    summary: dict) -> bool:
         return self.emit(
             tenant_lane_summary_wire(tenant, lane, summary, self.scenario))
+
+    def export_runtime_span(self, span) -> bool:
+        """One closed :class:`repro.obs.trace.Span` -> wire record."""
+        return self.emit(runtime_span_wire(span, self.scenario))
+
+    def export_runtime_metric(self, metric: str, kind: str, value=None,
+                              **kw) -> bool:
+        """One metric sample -> wire record (see ``runtime_metric_wire``)."""
+        return self.emit(runtime_metric_wire(metric, kind, value,
+                                             scenario=self.scenario, **kw))
+
+    def export_metrics(self, registry) -> int:
+        """Emit one ``runtime_metric`` record per labeled child of every
+        family in a :class:`repro.obs.metrics.MetricsRegistry`; returns how
+        many records were accepted.  Call at run boundaries — a registry
+        dump is a snapshot, not a stream."""
+        accepted = 0
+        for fam in registry.families():
+            for child in fam.children():
+                labels = dict(child.labels) or None
+                if fam.kind == "histogram":
+                    ok = self.export_runtime_metric(
+                        fam.name, "histogram", labels=labels,
+                        bucket_le=fam.buckets,
+                        bucket_counts=child.bucket_counts,
+                        sum_value=child.sum, observations=child.count)
+                else:
+                    ok = self.export_runtime_metric(
+                        fam.name, fam.kind, child.value, labels=labels)
+                accepted += bool(ok)
+        return accepted
 
     def bind(self, **labels: str) -> "_BoundClient":
         """A lightweight view of this client with a different scenario
@@ -291,6 +341,46 @@ class ExportClient:
         self._idle.set()
 
     def _write_batch(self, batch: List[dict]) -> None:
+        # runs on the flusher thread -> its own track in the chrome trace;
+        # stats are (re)published after every attempt (even all-dropped
+        # ones) so a dropping exporter is visible from a scrape.
+        _tr = obs_trace.get_tracer()
+        cm = (_tr.span("export.write_batch", batch=len(batch))
+              if _tr.enabled else obs_trace.NOOP_SPAN)
+        try:
+            with cm:
+                self._write_batch_inner(batch)
+        finally:
+            self._publish_stats()
+
+    _PUBLISHED_STAT_KEYS = ("emitted", "exported", "sink_failures")
+    _PUBLISHED_DROP_KEYS = ("dropped_queue_full", "dropped_invalid",
+                            "dropped_breaker_open", "dropped_sink_failure",
+                            "dropped_degraded")
+
+    def _publish_stats(self) -> None:
+        """Mirror the client's own counters into the sink's ``set_counter``
+        path (when it has one): ``repro_export_{emitted,exported,
+        sink_failures}_total`` plus ``repro_export_dropped_total`` labelled
+        by reason.  Best-effort — a sink that throws here must not take the
+        flusher down with it."""
+        set_counter = getattr(self.sink, "set_counter", None)
+        if set_counter is None:
+            return
+        st = self.stats()
+        try:
+            for key in self._PUBLISHED_STAT_KEYS:
+                set_counter(f"repro_export_{key}_total", st[key],
+                            help=f"Export client {key.replace('_', ' ')}")
+            for key in self._PUBLISHED_DROP_KEYS:
+                set_counter("repro_export_dropped_total", st[key],
+                            help="Records dropped by the export client, "
+                                 "by reason",
+                            reason=key[len("dropped_"):])
+        except Exception:
+            pass
+
+    def _write_batch_inner(self, batch: List[dict]) -> None:
         if self.validate:
             good: List[dict] = []
             bad = 0
@@ -328,13 +418,19 @@ class ExportClient:
     def flush(self, timeout: Optional[float] = None) -> None:
         """Block (the CALLER, never the epoch loop — call between runs)
         until everything enqueued so far has been offered to the sink."""
-        deadline = None if timeout is None else time.monotonic() + timeout
-        while not (self._queue.empty() and self._idle.is_set()):
-            if not self._thread.is_alive():
-                break
-            if deadline is not None and time.monotonic() >= deadline:
-                break
-            time.sleep(0.005)
+        _tr = obs_trace.get_tracer()
+        cm = (_tr.span("export.flush") if _tr.enabled else obs_trace.NOOP_SPAN)
+        with cm:
+            deadline = None if timeout is None else time.monotonic() + timeout
+            while not (self._queue.empty() and self._idle.is_set()):
+                if not self._thread.is_alive():
+                    break
+                if deadline is not None and time.monotonic() >= deadline:
+                    break
+                time.sleep(0.005)
+        # emit-time drops (queue_full / breaker_open / degraded) may never
+        # reach _write_batch; a flush is the natural scrape boundary
+        self._publish_stats()
 
     def close(self, timeout: Optional[float] = 5.0) -> None:
         """Stop accepting records, drain the queue, join the flusher, and
@@ -403,6 +499,17 @@ class _BoundClient:
                                    summary: dict) -> bool:
         return self.emit(
             tenant_lane_summary_wire(tenant, lane, summary, self.scenario))
+
+    def export_runtime_span(self, span) -> bool:
+        return self.emit(runtime_span_wire(span, self.scenario))
+
+    def export_runtime_metric(self, metric: str, kind: str, value=None,
+                              **kw) -> bool:
+        return self.emit(runtime_metric_wire(metric, kind, value,
+                                             scenario=self.scenario, **kw))
+
+    def export_metrics(self, registry) -> int:
+        return ExportClient.export_metrics(self, registry)
 
     def bind(self, **labels: str):
         return self._parent.bind(**labels)

@@ -23,9 +23,14 @@ JSON Schema in the checked-in ``telemetry.schema.json`` next to this file.
   differ (``resident`` -> ``resident_blocks``), which is what lets the
   schema stay frozen while the runtime refactors freely.
 
-Schema evolution is additive only: a new field must be optional, existing
-fields never change name, type, or units, and ``SCHEMA_VERSION`` bumps with
-any addition so consumers can gate on it.
+Schema evolution is additive only, along two paths.  Adding a whole new
+``record_type`` (as the repro.obs PR did with ``runtime_span`` /
+``runtime_metric``) leaves every existing shape byte-identical and is
+version-neutral: consumers switch on ``record_type`` and ignore types they
+do not know, while old validators reject the new types loudly rather than
+mis-parse them.  Adding a field to an *existing* shape must be optional,
+bumps that shape's ``schema_version``, and existing fields never change
+name, type, or units — so consumers can gate on the version.
 """
 from __future__ import annotations
 
@@ -40,6 +45,7 @@ __all__ = [
     "SCHEMA_PATH", "SCHEMA_VERSION", "SchemaError", "load_schema",
     "validate_record", "epoch_record_wire", "tenant_record_wire",
     "lane_summary_wire", "tenant_lane_summary_wire",
+    "runtime_span_wire", "runtime_metric_wire",
 ]
 
 SCHEMA_VERSION = 1
@@ -106,17 +112,26 @@ def _check(value, node: dict, schema: dict, path: str) -> None:
         raise SchemaError(f"{path}: {value!r} < minimum {node['minimum']}")
     if "maximum" in node and value > node["maximum"]:
         raise SchemaError(f"{path}: {value!r} > maximum {node['maximum']}")
+    if typ == "array":
+        items = node.get("items")
+        if items is not None:
+            for i, element in enumerate(value):
+                _check(element, items, schema, f"{path}[{i}]")
     if typ == "object":
         props = node.get("properties", {})
+        addl = node.get("additionalProperties")
         for req in node.get("required", ()):
             if req not in value:
                 raise SchemaError(f"{path}: missing required field {req!r}")
-        if node.get("additionalProperties") is False:
+        if addl is False:
             extra = set(value) - set(props)
             if extra:
                 raise SchemaError(f"{path}: unknown fields "
                                   f"{sorted(extra)} (the schema is frozen; "
                                   f"additive changes need a version bump)")
+        elif isinstance(addl, dict):    # schema-valued: free keys, typed values
+            for key in set(value) - set(props):
+                _check(value[key], addl, schema, f"{path}.{key}")
         for key, sub in props.items():
             if key in value:
                 _check(value[key], sub, schema, f"{path}.{key}")
@@ -214,4 +229,61 @@ def tenant_lane_summary_wire(tenant: str, lane: str,
     rec = {"record_type": "tenant_lane_summary",
            "schema_version": SCHEMA_VERSION, "tenant": tenant, "lane": lane}
     rec.update(summary)
+    return _with_scenario(rec, scenario)
+
+
+def runtime_span_wire(span, scenario: Optional[str] = None) -> dict:
+    """:class:`repro.obs.trace.Span` -> wire record.  ``span`` is
+    duck-typed (``name``/``t0_s``/``dur_s``/``tid``/``depth``/``epoch``/
+    ``args`` attributes) so this package never imports ``repro.obs``.
+    Seconds become the wire's ``_us`` fields; a ``record_sync`` span's
+    drained window (``epoch_base``/``n_epochs`` args) rides along so
+    timeline consumers can rebuild the device track."""
+    rec = {
+        "record_type": "runtime_span",
+        "schema_version": SCHEMA_VERSION,
+        "span": str(span.name),
+        "track": str(span.tid),
+        "t_start_us": float(span.t0_s) * 1e6,
+        "duration_us": max(float(span.dur_s), 0.0) * 1e6,
+        "depth": int(span.depth),
+    }
+    if span.epoch is not None:
+        rec["epoch"] = int(span.epoch)
+    args = span.args or {}
+    if "epoch_base" in args:
+        rec["epoch_base"] = int(args["epoch_base"])
+    if "n_epochs" in args:
+        rec["n_epochs_count"] = int(args["n_epochs"])
+    return _with_scenario(rec, scenario)
+
+
+def runtime_metric_wire(metric: str, kind: str, value=None, *,
+                        labels: Optional[Dict[str, str]] = None,
+                        bucket_le=None, bucket_counts=None,
+                        sum_value=None, observations=None,
+                        scenario: Optional[str] = None) -> dict:
+    """One registry metric sample -> wire record.  Counters/gauges carry
+    ``value``; histograms carry the full bounded-bucket state
+    (``bucket_le`` upper bounds, ``bucket_counts`` with the trailing
+    overflow bucket, ``sum``/``observations_count``).  Label values are
+    coerced to strings — the wire's ``labels`` map is string-to-string."""
+    rec: Dict[str, object] = {
+        "record_type": "runtime_metric",
+        "schema_version": SCHEMA_VERSION,
+        "metric": str(metric),
+        "kind": str(kind),
+    }
+    if labels:
+        rec["labels"] = {str(k): str(v) for k, v in labels.items()}
+    if value is not None:
+        rec["value"] = float(value)
+    if bucket_le is not None:
+        rec["bucket_le"] = [float(b) for b in bucket_le]
+    if bucket_counts is not None:
+        rec["bucket_counts"] = [int(c) for c in bucket_counts]
+    if sum_value is not None:
+        rec["sum"] = float(sum_value)
+    if observations is not None:
+        rec["observations_count"] = int(observations)
     return _with_scenario(rec, scenario)
